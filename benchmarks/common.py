@@ -1,0 +1,45 @@
+"""Shared helpers for the benchmark suite."""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+ART_DIR = os.environ.get("REPRO_ART_DIR",
+                         os.path.join(os.getcwd(), "experiments", "dryrun"))
+OUT_DIR = os.environ.get("REPRO_BENCH_DIR",
+                         os.path.join(os.getcwd(), "experiments", "bench"))
+
+
+def ensure_artifacts():
+    from repro.core import dataset
+    arts = dataset.load_dryrun_artifacts(ART_DIR)
+    if not arts:
+        raise SystemExit(
+            f"no dry-run artifacts in {ART_DIR}; run "
+            "`PYTHONPATH=src python -m repro.launch.dryrun --all` first")
+    return arts
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"
+
+
+def write_report(fname: str, text: str):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    return path

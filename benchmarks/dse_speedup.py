@@ -1,0 +1,83 @@
+"""DSE speedup — the paper's motivation quantified.
+
+Compares, per design point:
+  * fast path  — trained predictors, vectorized (the paper's contribution)
+  * slow path  — calibrated simulator on a scaled census (needs a compile)
+  * compile    — the real cost of the compile the fast path avoids (measured
+    wall from the dry-run artifacts; the GPGPU-Sim / prototype analogue)
+and end-to-end: does the fast path pick (nearly) the same accelerator?
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import ART_DIR, csv_row, ensure_artifacts, write_report
+from repro.core import costmodel, dataset, dse, features, predictors
+from repro.hw import get_chip
+
+
+def run() -> list:
+    arts = ensure_artifacts()
+    X, y_power, y_cycles, meta = dataset.build_dataset(ART_DIR)
+    rf = predictors.RandomForestRegressor().fit(X, y_power)
+    knn = predictors.KNNRegressor().fit(X, y_cycles)
+
+    space = dse.default_space()
+    rows, agree, quality = [], 0, []
+    compile_walls = []
+    n_workloads = 0
+    t_fast_total, t_slow_total = 0.0, 0.0
+    for (arch, shape, pod), art in sorted(arts.items()):
+        if pod != "pod1" or shape != "train_4k":
+            continue
+        n_workloads += 1
+        compile_walls.append(art["wall_s"])
+        base = {k: art["hxa"][k] for k in
+                ("flops", "hbm_bytes", "collective_bytes", "wire_bytes")}
+        cons = dse.Constraint(max_power_w=40_000, min_hbm_fit=False)
+        best_slow, results, t_slow = dse.slow_path_search(
+            arch, shape, base, art["roofline"]["n_chips"],
+            art["memory"]["state_gb_per_device"], space, cons)
+        best_fast, _, t_fast = dse.fast_path_search(
+            arch, shape, rf, knn, space, cons, verify_top_k=5,
+            slow_verify=lambda c: costmodel.simulate(
+                dse._scale_analysis(base, art["roofline"]["n_chips"], c),
+                get_chip(c.chip), c.n_chips, freq_mhz=c.freq_mhz))
+        t_fast_total += t_fast
+        t_slow_total += t_slow
+        if best_slow and best_fast:
+            e_s = results[best_slow]["sim"].energy_j
+            e_f = results[best_fast]["sim"].energy_j
+            quality.append(e_f / e_s)
+            agree += int(best_fast == best_slow)
+
+    per_point_fast = t_fast_total / max(n_workloads * len(space), 1) * 1e6
+    per_point_slow = t_slow_total / max(n_workloads * len(space), 1) * 1e6
+    per_point_compile = float(np.mean(compile_walls)) * 1e6
+    report = [
+        "# DSE speedup (fast predictors vs simulation vs compile)",
+        f"workloads: {n_workloads}; candidates/workload: {len(space)}",
+        f"fast path:      {per_point_fast:10.1f} us/point",
+        f"simulator path: {per_point_slow:10.1f} us/point "
+        f"({per_point_slow / max(per_point_fast, 1e-9):.1f}x slower)",
+        f"compile path:   {per_point_compile:10.0f} us/point "
+        f"({per_point_compile / max(per_point_fast, 1e-9):.0f}x slower — "
+        "the cost the paper's method avoids)",
+        f"exact-agreement with slow path: {agree}/{n_workloads}",
+        f"mean energy gap of fast pick: "
+        f"{(np.mean(quality) - 1) * 100 if quality else 0:.2f}%",
+    ]
+    rows.append(csv_row("dse_fast_path", per_point_fast,
+                        f"speedup_vs_compile={per_point_compile / max(per_point_fast, 1e-9):.0f}x"))
+    rows.append(csv_row("dse_quality_gap", 0.0,
+                        f"energy_gap={(np.mean(quality) - 1) * 100 if quality else 0:.2f}%"))
+    write_report("dse_speedup.md", "\n".join(report))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

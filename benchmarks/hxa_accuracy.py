@@ -1,0 +1,46 @@
+"""HyPA analogue table — what loop-aware static analysis buys.
+
+For every cached cell: HxA's trip-count-aware FLOPs vs XLA cost_analysis
+(which counts loop bodies once), the useful-flops ratio vs MODEL_FLOPS, and
+HxA analysis wall-time vs the compile wall-time it replaces (the paper's
+"faster than simulators, no GPU needed" claim)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, ensure_artifacts, write_report
+
+
+def run() -> list:
+    arts = ensure_artifacts()
+    rows = []
+    report = ["# HxA static analysis accuracy (HyPA analogue)", "",
+              "arch,shape,hxa_flops,xla_flops,loop_gain,useful_ratio,compile_s"]
+    gains, ratios = [], []
+    for (arch, shape, pod), art in sorted(arts.items()):
+        if pod != "pod1":
+            continue
+        hxa_f = art["hxa"]["flops"]
+        xla_f = max(art["cost"]["flops"], 1.0)
+        gain = hxa_f / xla_f
+        ratio = art["useful_flops_ratio"]
+        gains.append(gain)
+        ratios.append(ratio)
+        report.append(f"{arch},{shape},{hxa_f:.3e},{xla_f:.3e},"
+                      f"{gain:.1f}x,{ratio:.3f},{art['wall_s']}")
+    report += ["", f"median loop-awareness gain: {np.median(gains):.1f}x "
+               "(XLA cost_analysis counts scan bodies ONCE — HyPA's gap, "
+               "reproduced on HLO)",
+               f"median useful-flops ratio: {np.median(ratios):.3f}"]
+    rows.append(csv_row("hxa_loop_gain_median", 0.0,
+                        f"gain={np.median(gains):.2f}x"))
+    rows.append(csv_row("hxa_useful_ratio_median", 0.0,
+                        f"ratio={np.median(ratios):.3f}"))
+    write_report("hxa_accuracy.md", "\n".join(report))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle, with the
+structural VMEM-traffic delta (the quantity that matters on real TPU —
+interpret-mode wall times are NOT TPU times and are labeled as such)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, timed
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+def run() -> list:
+    rows = []
+    # flash attention: bytes the kernel keeps on-chip vs the XLA path
+    B, S, H, hd = 1, 512, 4, 64
+    q, k, v = (_rand((B, S, H, hd)) for _ in range(3))
+    _, t_ref = timed(lambda: ref.attention_ref(q, k, v).block_until_ready())
+    _, t_ker = timed(lambda: ops.flash_attention(q, k, v).block_until_ready())
+    score_bytes = B * H * S * S * 4 * 2          # s + p, fp32, one round-trip
+    rows.append(csv_row("flash_attention_interp", t_ker * 1e6,
+                        f"ref_us={t_ref * 1e6:.0f};vmem_saved_bytes={score_bytes}"))
+
+    b, S2, nh, hp, ds = 1, 512, 4, 32, 32
+    x = _rand((b, S2, nh, hp))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, S2, nh)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2, nh), jnp.float32)
+    Bm, Cm = _rand((b, S2, 1, ds)), _rand((b, S2, 1, ds))
+    _, t_ref = timed(lambda: ref.ssd_ref(x, dt, A, Bm, Cm).block_until_ready())
+    _, t_ker = timed(lambda: ops.ssd_scan(x, dt, A, Bm, Cm, chunk=128)
+                     .block_until_ready())
+    nc = S2 // 128
+    ssd_bytes = b * nh * nc * 128 * 128 * 4 * 2  # L + CB blocks
+    rows.append(csv_row("ssd_scan_interp", t_ker * 1e6,
+                        f"ref_us={t_ref * 1e6:.0f};vmem_saved_bytes={ssd_bytes}"))
+
+    xc = _rand((2, 32, 32, 16))
+    wc = _rand((3, 3, 16, 32)) * 0.1
+    _, t_ref = timed(lambda: ref.conv2d_ref(
+        jnp.pad(xc, ((0, 0), (1, 1), (1, 1), (0, 0))), wc).block_until_ready())
+    _, t_ker = timed(lambda: ops.conv2d(xc, wc).block_until_ready())
+    rows.append(csv_row("conv2d_interp", t_ker * 1e6,
+                        f"ref_us={t_ref * 1e6:.0f};mxu_tiles={(32 * 32) // 128 + 1}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

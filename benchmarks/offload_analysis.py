@@ -1,0 +1,44 @@
+"""Offloading analysis (paper §IV future work) — bandwidth/latency sweep.
+
+Where should a LLM-prefill-class inference run: edge TPU or cloud v5e slice?
+Reports the latency- and battery-optimal decision across bandwidths, and the
+crossover bandwidth (the paper's Jetson 7W-vs-2W example, systematized)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, write_report
+from repro.core import offload
+
+LOCAL = {"flops": 2.0e12, "hbm_bytes": 2.0e10, "collective_bytes": 0.0,
+         "wire_bytes": 0.0}
+REMOTE = {"flops": 1.2e11, "hbm_bytes": 1.5e9, "collective_bytes": 0.02e9,
+          "wire_bytes": 0.02e9}
+REQ, RESP = 1.5e6 * 8, 4e3 * 8   # prompt+image payload up
+
+
+def run() -> list:
+    report = ["# Offload analysis (bandwidth sweep)",
+              "bw_mbps,local_ms,remote_ms,latency_choice,battery_choice"]
+    crossover = None
+    for bw in np.geomspace(1, 2000, 24):
+        d = offload.analyze(LOCAL, REMOTE, REQ, RESP,
+                            offload.NetworkSpec(bandwidth_bps=bw * 1e6))
+        report.append(f"{bw:.1f},{d.local_latency_s * 1e3:.2f},"
+                      f"{d.remote_latency_s * 1e3:.2f},"
+                      f"{'offload' if d.choose_remote_latency else 'local'},"
+                      f"{'offload' if d.choose_remote_battery else 'local'}")
+        if crossover is None and d.choose_remote_latency:
+            crossover = bw
+    report.append("")
+    report.append(f"latency crossover bandwidth: "
+                  f"{crossover:.1f} Mbps" if crossover else "no crossover")
+    write_report("offload_analysis.md", "\n".join(report))
+    return [csv_row("offload_crossover_mbps", 0.0,
+                    f"bw={crossover:.1f}" if crossover else "bw=inf")]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

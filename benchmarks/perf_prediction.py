@@ -1,0 +1,50 @@
+"""Paper Fig. 3 analogue — performance (cycles) prediction.
+
+Paper reference: KNN MAPE 5.94% for number-of-cycles prediction.
+Adds a leave-one-architecture-out split (harder than the paper's setup) as a
+beyond-paper generalization check.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ART_DIR, csv_row, timed, write_report
+from repro.core import dataset, predictors
+
+
+def _leave_one_arch_out(X, y, meta, model_name: str) -> float:
+    archs = sorted({m.arch for m in meta})
+    mapes = []
+    arch_arr = np.asarray([m.arch for m in meta])
+    for a in archs:
+        test = arch_arr == a
+        if test.sum() < 4 or (~test).sum() < 20:
+            continue
+        m = predictors.MODELS[model_name]()
+        m.fit(X[~test], y[~test])
+        mapes.append(predictors.mape(y[test], m.predict(X[test])))
+    return float(np.mean(mapes)) if mapes else float("nan")
+
+
+def run() -> list:
+    X, y_power, y_cycles, meta = dataset.build_dataset(ART_DIR)
+    rows, report = [], ["# Cycles prediction (paper Fig. 3 analogue)",
+                        f"design points: {len(X)}", ""]
+    for name in ("knn", "decision_tree", "random_forest"):
+        res, wall = timed(predictors.kfold_evaluate, name, X, y_cycles, repeats=1)
+        report.append(f"{name:16s} MAPE {res['mape']:6.2f}%   R2 {res['r2']:.4f}")
+        rows.append(csv_row(f"cycles_pred_{name}", wall * 1e6 / max(len(X), 1),
+                            f"mape={res['mape']:.2f}%;r2={res['r2']:.4f}"))
+    report.append("(paper: KNN 5.94%)")
+    loo = _leave_one_arch_out(X, y_cycles, meta, "random_forest")
+    report += ["", f"leave-one-arch-out (beyond paper), random_forest: "
+               f"MAPE {loo:.2f}%"]
+    rows.append(csv_row("cycles_pred_loo_rf", 0.0, f"mape={loo:.2f}%"))
+    write_report("perf_prediction.md", "\n".join(report))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,51 @@
+"""Paper Fig. 2 analogue — power prediction across a DVFS sweep.
+
+Trains the paper's three predictors on design points (arch x shape x chip x
+frequency), k-fold cross-validated, and reports MAPE / R^2 per model for the
+POWER target.  Paper reference: Random Forest MAPE 5.03%, R^2 0.9561 on a
+V100S 397-1590 MHz sweep.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ART_DIR, csv_row, timed, write_report
+from repro.core import dataset, predictors
+
+
+def run() -> list:
+    X, y_power, y_cycles, meta = dataset.build_dataset(ART_DIR)
+    rows, report = [], ["# Power prediction (paper Fig. 2 analogue)",
+                        f"design points: {len(X)}", ""]
+    best = None
+    for name in ("knn", "decision_tree", "random_forest"):
+        res, wall = timed(predictors.kfold_evaluate, name, X, y_power, repeats=1)
+        report.append(f"{name:16s} MAPE {res['mape']:6.2f}%   R2 {res['r2']:.4f}")
+        rows.append(csv_row(f"power_pred_{name}", wall * 1e6 / max(len(X), 1),
+                            f"mape={res['mape']:.2f}%;r2={res['r2']:.4f}"))
+        if best is None or res["mape"] < best[1]["mape"]:
+            best = (name, res)
+    report += ["", f"best: {best[0]} (paper: random_forest 5.03% / 0.9561)"]
+
+    # per-frequency trace for three archs (the Fig. 2 picture, textual)
+    m = predictors.RandomForestRegressor().fit(X, y_power)
+    pred = m.predict(X)
+    lines = {}
+    for x, yt, yp, mt in zip(X, y_power, pred, meta):
+        if mt.chip == "tpu-v5e" and mt.shape == "train_4k":
+            lines.setdefault(mt.arch, []).append((mt.freq_mhz, yt, yp))
+    report.append("")
+    for arch in list(lines)[:3]:
+        report.append(f"## {arch} (tpu-v5e, train_4k)")
+        report.append("freq_mhz,real_w,predicted_w")
+        for f, yt, yp in sorted(lines[arch]):
+            report.append(f"{f:.0f},{yt:.1f},{yp:.1f}")
+        report.append("")
+    write_report("power_prediction.md", "\n".join(report))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,52 @@
+"""Benchmark suite — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (scaffold contract) and writes
+markdown reports under experiments/bench/.
+
+  PYTHONPATH=src python -m benchmarks.run [--only power,perf,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    ("power", "benchmarks.power_prediction"),     # paper Fig. 2
+    ("perf", "benchmarks.perf_prediction"),       # paper Fig. 3
+    ("hxa", "benchmarks.hxa_accuracy"),           # HyPA table
+    ("dse", "benchmarks.dse_speedup"),            # DSE motivation
+    ("offload", "benchmarks.offload_analysis"),   # paper §IV
+    ("roofline", "benchmarks.roofline_table"),    # §Roofline generator
+    ("kernels", "benchmarks.kernel_bench"),       # Pallas kernels
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", help="comma-separated subset of: "
+                    + ",".join(k for k, _ in MODULES))
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failed = []
+    for key, modname in MODULES:
+        if want and key not in want:
+            continue
+        try:
+            import importlib
+            mod = importlib.import_module(modname)
+            for row in mod.run():
+                print(row)
+        except SystemExit as e:
+            print(f"{key},0,SKIPPED:{e}")
+        except Exception:
+            failed.append(key)
+            traceback.print_exc()
+    if failed:
+        sys.exit(f"benchmark failures: {failed}")
+
+
+if __name__ == "__main__":
+    main()

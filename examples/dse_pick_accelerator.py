@@ -1,0 +1,50 @@
+"""The paper's headline workflow: pick the right accelerator via ML-aided DSE.
+
+Trains the paper's predictor suite (KNN / Decision Tree / Random Forest) on
+cached dry-run design points, then explores the accelerator space (TPU
+generation x slice size x DVFS frequency) for a target workload under a power
+budget — fast path (predictors) vs slow path (simulator), with the speedup
+the paper motivates.
+
+  PYTHONPATH=src python examples/dse_pick_accelerator.py
+"""
+
+import os
+
+import numpy as np
+
+from repro.core import dataset, dse, predictors
+
+ART = os.path.join(os.getcwd(), "experiments", "dryrun")
+
+if __name__ == "__main__":
+    X, y_power, y_cycles, meta = dataset.build_dataset(ART)
+    if len(X) < 40:
+        raise SystemExit(f"need cached dry-run artifacts in {ART} "
+                         "(run python -m repro.launch.dryrun --all first)")
+    print(f"design points: {len(X)}")
+    rf = predictors.RandomForestRegressor().fit(X, y_power)
+    knn = predictors.KNNRegressor().fit(X, y_cycles)
+
+    arts = dataset.load_dryrun_artifacts(ART)
+    key = ("qwen3_14b", "train_4k", "pod1")
+    if key not in arts:
+        key = sorted(arts)[0]
+    art = arts[key]
+    base = {k: art["hxa"][k] for k in
+            ("flops", "hbm_bytes", "collective_bytes", "wire_bytes")}
+    space = dse.default_space()
+    cons = dse.Constraint(max_power_w=30_000)   # 30 kW budget
+
+    best_slow, _, t_slow = dse.slow_path_search(
+        key[0], key[1], base, art["roofline"]["n_chips"],
+        art["memory"]["state_gb_per_device"], space, cons)
+    best_fast, _, t_fast = dse.fast_path_search(
+        key[0], key[1], rf, knn, space, cons)
+    print(f"workload: {key[0]} x {key[1]}")
+    print(f"slow path: {best_slow.chip} x{best_slow.n_chips} @ "
+          f"{best_slow.freq_mhz:.0f} MHz   ({t_slow * 1e3:.1f} ms)")
+    print(f"fast path: {best_fast.chip} x{best_fast.n_chips} @ "
+          f"{best_fast.freq_mhz:.0f} MHz   ({t_fast * 1e3:.1f} ms)")
+    print(f"DSE speedup (per evaluated point): "
+          f"{t_slow / max(t_fast, 1e-9):.1f}x over {len(space)} candidates")

@@ -1,0 +1,31 @@
+"""Edge-vs-cloud offloading analysis (the paper's §IV future work).
+
+Sweeps network bandwidth and reports where inference should run — locally on
+an edge TPU or offloaded to a cloud v5e slice — for latency and for battery.
+Mirrors the paper's Jetson-vs-cloud motivating example (7 W local vs 2 W
+offloaded).
+
+  PYTHONPATH=src python examples/offload_decision.py
+"""
+
+from repro.core import offload
+
+if __name__ == "__main__":
+    # HxA censuses of a LLM-prefill-class inference, per device (analytic stand-in
+    # numbers of the right magnitude; the benchmark suite derives them from
+    # compiled artifacts).
+    local = {"flops": 2.0e12, "hbm_bytes": 2.0e10, "collective_bytes": 0.0,
+             "wire_bytes": 0.0}
+    remote = {"flops": 1.2e11, "hbm_bytes": 1.5e9, "collective_bytes": 0.02e9,
+              "wire_bytes": 0.02e9}
+    req, resp = 1.5e6 * 8, 4e3 * 8     # 1.5 MB payload up, 4 KB logits down
+
+    print(f"{'bw (Mbps)':>10} {'local (ms)':>11} {'remote (ms)':>12} "
+          f"{'latency says':>13} {'battery says':>13}")
+    for bw_mbps in (2, 10, 50, 200, 1000):
+        net = offload.NetworkSpec(bandwidth_bps=bw_mbps * 1e6)
+        d = offload.analyze(local, remote, req, resp, net)
+        print(f"{bw_mbps:>10} {d.local_latency_s * 1e3:>11.2f} "
+              f"{d.remote_latency_s * 1e3:>12.2f} "
+              f"{'offload' if d.choose_remote_latency else 'local':>13} "
+              f"{'offload' if d.choose_remote_battery else 'local':>13}")

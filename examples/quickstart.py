@@ -1,0 +1,22 @@
+"""Quickstart: train a reduced model end-to-end, checkpoint, restore, resume.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import tempfile
+
+from repro.launch.train import train
+
+if __name__ == "__main__":
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        print("== phase 1: train 40 steps with checkpoints ==")
+        losses1, _ = train("stablelm-1.6b", steps=40, reduced=True,
+                           seq_len=128, batch=8, ckpt_dir=ckpt_dir,
+                           ckpt_every=20, install_signals=False)
+        print("== phase 2: simulate restart, restore, train 20 more ==")
+        losses2, _ = train("stablelm-1.6b", steps=60, reduced=True,
+                           seq_len=128, batch=8, ckpt_dir=ckpt_dir,
+                           restore=True, ckpt_every=20, install_signals=False)
+        assert losses2[-1] < losses1[0], "loss should improve across restart"
+        print(f"quickstart OK: {losses1[0]:.3f} -> {losses2[-1]:.3f} "
+              f"(through a checkpoint/restore cycle)")

@@ -1,0 +1,15 @@
+"""Serve a small model with batched requests (continuous batching engine).
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+from repro.launch.serve import serve
+
+if __name__ == "__main__":
+    reqs, stats = serve("stablelm-1.6b", n_requests=6, slots=3,
+                        max_len=96, max_new=12)
+    for r in reqs[:3]:
+        print(f"req {r.rid}: prompt {len(r.prompt)} toks -> {r.tokens_out}")
+    print(f"serve_batch OK: {stats['completed']}/{len(reqs)} requests, "
+          f"{stats['tok_per_s']:.1f} tok/s")
+    assert stats["completed"] == len(reqs)

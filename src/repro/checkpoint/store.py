@@ -1,0 +1,121 @@
+"""Atomic, async, ELASTIC checkpointing.
+
+Layout (mesh-agnostic: arrays are saved unsharded so restore can re-shard
+onto any device count — elastic scaling):
+
+  <dir>/step_<N>.tmp/...   -> atomic rename -> <dir>/step_<N>/
+      manifest.json        (step, tree structure, dtypes, shapes, data state)
+      arr_<i>.npy          one file per leaf
+
+Async: ``save_async`` snapshots to host memory synchronously (cheap) and
+writes in a daemon thread, so the train loop never blocks on disk.  A
+failure mid-write never corrupts the latest checkpoint (tmp+rename).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    return flat, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat, treedef = _leaf_paths(tree)
+    import pickle
+    manifest = {"step": step, "n_leaves": len(flat),
+                "treedef_pkl": pickle.dumps(treedef).hex(),
+                "extra": extra or {}, "dtypes": []}
+    for i, leaf in enumerate(flat):
+        arr = np.asarray(leaf)
+        manifest["dtypes"].append(str(arr.dtype))
+        if arr.dtype.name == "bfloat16":     # numpy can't round-trip ml_dtypes
+            arr = arr.view(np.uint16)
+        np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                       # atomic publish
+    _gc(ckpt_dir, keep=3)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(
+        (int(d.split("_")[1]), d) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp"))
+    for _, d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Snapshot-then-write-in-background; at most one write in flight."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._thread: Optional[threading.Thread] = None
+
+    def save_async(self, step: int, tree: Any, extra: Optional[Dict] = None):
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+        self.wait()
+        self._thread = threading.Thread(
+            target=save, args=(self.ckpt_dir, step, host_tree, extra), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: Optional[int] = None,
+            shardings: Optional[Any] = None) -> Tuple[int, Any, Dict]:
+    """Restore; with ``shardings`` (possibly for a DIFFERENT mesh/device count
+    than at save time) arrays are placed sharded — elastic restart."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    import pickle
+    treedef = pickle.loads(bytes.fromhex(manifest["treedef_pkl"]))
+    leaves = []
+    dtypes = manifest.get("dtypes", [])
+    for i in range(manifest["n_leaves"]):
+        arr = np.load(os.path.join(d, f"arr_{i}.npy"))
+        if i < len(dtypes) and dtypes[i] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return step, tree, manifest.get("extra", {})

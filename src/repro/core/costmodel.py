@@ -1,0 +1,105 @@
+"""Analytical ground-truth simulator: latency (cycles) + power + energy.
+
+Role in the reproduction: the paper trains its predictors against POWER and
+CYCLES measured on a real V100S.  This container is CPU-only, so the measured
+target is replaced by a deterministic, calibrated analytical model over the
+compiled artifact (the "slow-accurate path"): HxA census -> three roofline
+terms -> partial-overlap latency -> CMOS power.  The ML predictors (fast path)
+never see any of this — they predict from static early-design features only,
+exactly like the paper.
+
+Latency model:
+  t_comp = flops / (peak * mxu_derate)        t_mem = hbm_bytes / hbm_bw
+  t_coll = wire_bytes / (ici_bw * links_used)
+  latency = max(t) + (1 - overlap) * (sum(t) - max(t))
+    -- overlap=0.8: XLA latency-hiding overlaps most, not all, of the
+       non-dominant terms.
+
+Power model (per chip):
+  P = P_idle + (TDP - P_idle) * (w_mxu*u_mxu + w_hbm*u_hbm + w_ici*u_ici)
+      * (f/f_max)^3            [DVFS cubic, paper ref [5]]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.hw import ChipSpec, get_chip
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    overlap: float = 0.8
+    w_mxu: float = 0.55
+    w_hbm: float = 0.30
+    w_ici: float = 0.15
+    links_used: int = 2          # links concurrently busy per collective step
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    latency_s: float
+    cycles: float
+    utilization: float
+    power_w: float               # per chip
+    energy_j: float              # whole slice
+    bottleneck: str
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(analysis: Dict, chip: ChipSpec, n_chips: int) -> Dict:
+    """The §Roofline contract.  ``analysis`` holds PER-DEVICE HxA numbers, so
+    term = per_device_quantity / per_chip_rate == global / (chips * rate)."""
+    t_comp = analysis["flops"] / chip.peak_flops_bf16
+    t_mem = analysis["hbm_bytes"] / chip.hbm_bw
+    t_coll = (analysis["collective_bytes"] / chip.ici_bw
+              if chip.ici_bw else 0.0)
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    return {**terms, "dominant": dom,
+            "hlo_flops_per_device": analysis["flops"],
+            "hlo_bytes_per_device": analysis["hbm_bytes"],
+            "collective_bytes_per_device": analysis["collective_bytes"],
+            "n_chips": n_chips}
+
+
+def simulate(analysis: Dict, chip: ChipSpec, n_chips: int,
+             freq_mhz: Optional[float] = None,
+             sim: SimConfig = SimConfig()) -> SimResult:
+    """Slow-accurate path: deterministic latency/power from a compiled cell."""
+    if freq_mhz is None:
+        freq_mhz = chip.nominal_freq_mhz
+    chip_f = chip.at_frequency(freq_mhz)
+    t_comp = analysis["flops"] / chip_f.peak_flops_bf16
+    t_mem = analysis["hbm_bytes"] / chip_f.hbm_bw
+    wire = analysis.get("wire_bytes", analysis.get("collective_bytes", 0.0))
+    t_coll = wire / (chip_f.ici_bw * max(sim.links_used, 1)) if chip_f.ici_bw else 0.0
+
+    ts = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(ts, key=ts.get)
+    t_max = ts[dom]
+    latency = t_max + (1.0 - sim.overlap) * (sum(ts.values()) - t_max)
+    latency = max(latency, 1e-9)
+
+    u_mxu = t_comp / latency
+    u_hbm = t_mem / latency
+    u_ici = t_coll / latency
+    util = sim.w_mxu * u_mxu + sim.w_hbm * u_hbm + sim.w_ici * u_ici
+    power = chip.dynamic_power(freq_mhz, util)
+    cycles = latency * freq_mhz * 1e6
+    return SimResult(
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        latency_s=latency, cycles=cycles, utilization=u_mxu,
+        power_w=power, energy_j=power * latency * n_chips,
+        bottleneck=dom)
+
+
+def simulate_by_name(analysis: Dict, chip_name: str, n_chips: int,
+                     freq_mhz: Optional[float] = None) -> SimResult:
+    return simulate(analysis, get_chip(chip_name), n_chips, freq_mhz)

@@ -1,0 +1,95 @@
+"""Design-point dataset builder for predictor training.
+
+A design point = (arch, shape, chip, freq, mesh).  Ground-truth labels come
+from the slow-accurate path (compiled dry-run -> HxA -> cost model); to keep
+the sweep tractable on one CPU the HxA census of a compiled (arch, shape,
+mesh) cell is CACHED and re-simulated across the DVFS/chip sweep — exactly
+how the paper reuses one profiled workload across frequencies (Fig. 2: the
+same three CNNs at 397-1590 MHz).
+
+The resulting (X, y_power, y_cycles) arrays feed predictors.kfold_evaluate —
+the paper's Figs. 2-3 experiment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ARCH_NAMES, SHAPES, get_config
+from repro.core import costmodel, features
+from repro.hw import CHIPS, get_chip, frequency_sweep
+
+
+@dataclasses.dataclass
+class DesignPoint:
+    arch: str
+    shape: str
+    chip: str
+    freq_mhz: float
+    mesh: Tuple[int, ...] = (16, 16)
+
+    @property
+    def n_chips(self) -> int:
+        n = 1
+        for d in self.mesh:
+            n *= d
+        return n
+
+
+def load_dryrun_artifacts(art_dir: str) -> Dict[Tuple[str, str, str], dict]:
+    """(arch, shape, pod-tag) -> artifact json."""
+    out = {}
+    if not os.path.isdir(art_dir):
+        return out
+    for fn in os.listdir(art_dir):
+        if not fn.endswith(".json") or "__" not in fn:
+            continue
+        parts = fn[:-5].split("__")
+        if len(parts) != 3:
+            continue  # hillclimb variants carry a 4th tag; baselines only
+        arch, shape, pod = parts
+        try:
+            with open(os.path.join(art_dir, fn)) as f:
+                out[(arch, shape, pod)] = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            continue
+    return out
+
+
+def build_dataset(art_dir: str, chips: Optional[List[str]] = None,
+                  freq_points: int = 8, pod: str = "pod1"):
+    """Sweep cached cells x chips x frequencies -> (X, y_power, y_cycles, meta).
+
+    Labels: the calibrated simulator on the REAL compiled census (slow path).
+    Features: static config/hardware numerics only (fast path inputs).
+    """
+    chips = chips or [c for c in CHIPS if CHIPS[c].ici_bw > 0]
+    arts = load_dryrun_artifacts(art_dir)
+    X, y_power, y_cycles, meta = [], [], [], []
+    for (arch, shape_name, pod_tag), art in sorted(arts.items()):
+        if pod_tag != pod:
+            continue
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        n_chips = art["roofline"]["n_chips"]
+        analysis = {"flops": art["hxa"]["flops"],
+                    "hbm_bytes": art["hxa"]["hbm_bytes"],
+                    "collective_bytes": art["hxa"]["collective_bytes"],
+                    "wire_bytes": art["hxa"]["wire_bytes"]}
+        mesh_shape = (2, 16, 16) if pod == "pod2" else (16, 16)
+        for chip_name in chips:
+            chip = get_chip(chip_name)
+            for f in frequency_sweep(chip_name, freq_points):
+                res = costmodel.simulate(analysis, chip, n_chips, freq_mhz=f)
+                X.append(features.extract(cfg, shape, chip, n_chips,
+                                          mesh_shape=mesh_shape, freq_mhz=f))
+                y_power.append(res.power_w)
+                y_cycles.append(res.cycles)
+                meta.append(DesignPoint(arch, shape_name, chip_name, f, mesh_shape))
+    return (np.asarray(X, np.float32), np.asarray(y_power, np.float64),
+            np.asarray(y_cycles, np.float64), meta)

@@ -1,0 +1,153 @@
+"""Design Space Exploration — the paper's end goal.
+
+"identify the most appropriate GPGPU for CNN inferencing systems" ->
+identify the most appropriate TPU slice (generation, chip count, mesh shape,
+DVFS frequency) for a given (arch, shape) workload, under power / latency /
+capacity constraints.
+
+Two exploration modes mirror the paper's comparison:
+  * slow path  — run the calibrated simulator on every candidate (stands in
+    for "simulate / prototype each design"; requires a compiled census).
+  * fast path  — rank ALL candidates with the trained ML predictors in one
+    vectorized call (microseconds/point), then verify only the top-k with the
+    slow path.  The speedup of fast vs slow is a paper deliverable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import SHAPES, get_config
+from repro.core import costmodel, features
+from repro.hw import CHIPS, get_chip, frequency_sweep
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    chip: str
+    n_chips: int
+    mesh: Tuple[int, ...]
+    freq_mhz: float
+
+
+@dataclasses.dataclass
+class Constraint:
+    max_power_w: Optional[float] = None      # whole-slice power budget
+    max_latency_s: Optional[float] = None
+    min_hbm_fit: bool = True                 # state must fit HBM
+
+
+def default_space(freq_points: int = 6) -> List[Candidate]:
+    """The accelerator design space: generation x slice size x DVFS point."""
+    out = []
+    meshes = [(4, 4), (8, 8), (8, 16), (16, 16), (2, 16, 16)]
+    for chip_name, chip in CHIPS.items():
+        if chip.ici_bw == 0:
+            meshes_c = [(1, 1)]
+        else:
+            meshes_c = meshes
+        for mesh in meshes_c:
+            n = int(np.prod(mesh))
+            for f in frequency_sweep(chip_name, freq_points):
+                out.append(Candidate(chip_name, n, mesh, f))
+    return out
+
+
+def _scale_analysis(base_analysis: Dict, base_chips: int, cand: Candidate) -> Dict:
+    """First-order rescale of a compiled census to a different slice size.
+
+    flops/bytes scale ~1/chips (data/model parallel split); collective bytes
+    grow with ring size: x (n-1)/n relative to base ring.
+    """
+    r = base_chips / cand.n_chips
+    nb, nc = base_chips, cand.n_chips
+    ring = ((nc - 1) / nc) / max((nb - 1) / nb, 1e-9) if nc > 1 else 0.0
+    return {
+        "flops": base_analysis["flops"] * r,
+        "hbm_bytes": base_analysis["hbm_bytes"] * r,
+        "collective_bytes": base_analysis["collective_bytes"] * r * ring,
+        "wire_bytes": base_analysis["wire_bytes"] * r * ring,
+    }
+
+
+def slow_path_search(arch: str, shape_name: str, base_analysis: Dict,
+                     base_chips: int, state_gb_per_device: float,
+                     space: List[Candidate],
+                     constraint: Constraint = Constraint(),
+                     objective: str = "energy") -> Tuple[Candidate, Dict, float]:
+    """Exhaustive simulator sweep (the paper's 'slow' baseline). Returns
+    (best, per-candidate results, wall_seconds)."""
+    t0 = time.perf_counter()
+    best, best_score, results = None, float("inf"), {}
+    for cand in space:
+        chip = get_chip(cand.chip)
+        ana = _scale_analysis(base_analysis, base_chips, cand)
+        res = costmodel.simulate(ana, chip, cand.n_chips, freq_mhz=cand.freq_mhz)
+        state_pd = state_gb_per_device * base_chips / cand.n_chips
+        fits = state_pd * 1e9 <= chip.hbm_bytes * 0.9
+        ok = ((not constraint.min_hbm_fit or fits)
+              and (constraint.max_power_w is None
+                   or res.power_w * cand.n_chips <= constraint.max_power_w)
+              and (constraint.max_latency_s is None
+                   or res.latency_s <= constraint.max_latency_s))
+        score = (res.energy_j if objective == "energy" else res.latency_s)
+        results[cand] = {"sim": res, "feasible": ok}
+        if ok and score < best_score:
+            best, best_score = cand, score
+    return best, results, time.perf_counter() - t0
+
+
+def fast_path_search(arch: str, shape_name: str, power_model, cycles_model,
+                     space: List[Candidate],
+                     constraint: Constraint = Constraint(),
+                     objective: str = "energy",
+                     verify_top_k: int = 5,
+                     slow_verify=None) -> Tuple[Candidate, Dict, float]:
+    """Predictor-ranked search (the paper's fast path).
+
+    One vectorized predict over the whole space, rank by predicted objective,
+    optionally re-verify the top-k with the simulator (callable
+    ``slow_verify(cand) -> SimResult``)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    t0 = time.perf_counter()
+    X = np.asarray([features.extract(cfg, shape, get_chip(c.chip), c.n_chips,
+                                     mesh_shape=c.mesh, freq_mhz=c.freq_mhz)
+                    for c in space], np.float32)
+    p_watts = power_model.predict(X)                 # per chip
+    p_cycles = cycles_model.predict(X)
+    freqs = np.asarray([c.freq_mhz for c in space]) * 1e6
+    n = np.asarray([c.n_chips for c in space], np.float64)
+    lat = p_cycles / freqs
+    energy = p_watts * n * lat
+    feasible = np.ones(len(space), bool)
+    if constraint.max_power_w is not None:
+        feasible &= (p_watts * n) <= constraint.max_power_w
+    if constraint.max_latency_s is not None:
+        feasible &= lat <= constraint.max_latency_s
+    if constraint.min_hbm_fit:
+        for i, c in enumerate(space):
+            chip = get_chip(c.chip)
+            need = cfg.param_count() * 2 * (3.0 if shape.kind == "train" else 1.0)
+            feasible[i] &= need / c.n_chips <= chip.hbm_bytes * 0.9
+    score = energy if objective == "energy" else lat
+    score = np.where(feasible, score, np.inf)
+    order = np.argsort(score)
+    elapsed = time.perf_counter() - t0
+    top = [space[i] for i in order[:verify_top_k] if np.isfinite(score[i])]
+    if not top:
+        return None, {}, elapsed
+    best = top[0]
+    if slow_verify is not None:
+        verified = [(slow_verify(c), c) for c in top]
+        key = ((lambda rc: rc[0].energy_j) if objective == "energy"
+               else (lambda rc: rc[0].latency_s))
+        best = min(verified, key=key)[1]
+    details = {"predicted_power_w": p_watts, "predicted_cycles": p_cycles,
+               "order": order[:verify_top_k]}
+    return best, details, elapsed

@@ -1,0 +1,70 @@
+"""Offloading analyzer — the paper's §IV future work, implemented.
+
+"devise approaches to discern whether offloading would adhere to the
+constraints or if executing locally would be more advantageous" — given an
+edge device, a cloud slice, and a network (bandwidth, RTT), decide where an
+inference request should run, for latency or energy.
+
+Energy accounting on the edge device includes radio transmit/receive power;
+cloud energy is booked separately (operator view) so both the
+battery-centric and the total-energy decisions are reported.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core import costmodel
+from repro.hw import get_chip
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkSpec:
+    bandwidth_bps: float = 100e6       # uplink
+    downlink_bps: float = 300e6
+    rtt_s: float = 0.04
+    tx_power_w: float = 1.2            # radio while transmitting
+    rx_power_w: float = 0.8
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadDecision:
+    local_latency_s: float
+    remote_latency_s: float
+    local_energy_j: float              # edge-battery energy
+    remote_edge_energy_j: float        # edge-battery energy when offloading
+    remote_total_energy_j: float       # + cloud slice energy
+    choose_remote_latency: bool
+    choose_remote_battery: bool
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(local_analysis: Dict, remote_analysis: Dict,
+            request_bytes: float, response_bytes: float,
+            net: NetworkSpec = NetworkSpec(),
+            local_chip: str = "tpu-edge", remote_chip: str = "tpu-v5e",
+            remote_chips: int = 4) -> OffloadDecision:
+    """local/remote_analysis: HxA censuses of the SAME workload compiled for
+    each target (per-device)."""
+    local = costmodel.simulate(local_analysis, get_chip(local_chip), 1)
+    remote = costmodel.simulate(remote_analysis, get_chip(remote_chip), remote_chips)
+
+    t_net = (request_bytes / net.bandwidth_bps
+             + response_bytes / net.downlink_bps + net.rtt_s)
+    remote_latency = remote.latency_s + t_net
+    e_radio = (request_bytes / net.bandwidth_bps) * net.tx_power_w \
+        + (response_bytes / net.downlink_bps) * net.rx_power_w
+    idle_during_wait = get_chip(local_chip).idle_watts * remote_latency
+    remote_edge_energy = e_radio + idle_during_wait
+    return OffloadDecision(
+        local_latency_s=local.latency_s,
+        remote_latency_s=remote_latency,
+        local_energy_j=local.energy_j,
+        remote_edge_energy_j=remote_edge_energy,
+        remote_total_energy_j=remote_edge_energy + remote.energy_j,
+        choose_remote_latency=remote_latency < local.latency_s,
+        choose_remote_battery=remote_edge_energy < local.energy_j,
+    )

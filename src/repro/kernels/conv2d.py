@@ -1,0 +1,62 @@
+"""im2col-free conv2d Pallas TPU kernel — the paper's own CNN hot spot.
+
+TPU adaptation of the CNN-inference workload: instead of a CUDA im2col +
+GEMM, each (batch, out-row-tile) grid cell accumulates kh*kw MXU matmuls of
+shape [tile_h*W_out, Cin] x [Cin, Cout] — the shifted-window decomposition.
+Spatial shifts are STATIC python offsets, so every matmul maps straight onto
+the systolic array with no gather.  Inputs are pre-padded by ops.py; VALID
+semantics inside the kernel; stride 1 (ResNet 3x3 convs; strided 1x1 convs
+lower to XLA directly).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, tile_h: int,
+                 w_out: int, cin: int, cout: int):
+    t = pl.program_id(1)
+    # halo read: rows [t*tile_h, t*tile_h + tile_h + kh - 1)
+    x = x_ref[0, pl.ds(t * tile_h, tile_h + kh - 1)].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)          # [kh, kw, Cin, Cout]
+    acc = jnp.zeros((tile_h * w_out, cout), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            win = x[i: i + tile_h, j: j + w_out, :]          # static slice
+            acc = acc + jax.lax.dot_general(
+                win.reshape(tile_h * w_out, cin), w[i, j],
+                (((1,), (0,)), ((), ())))
+    o_ref[0] = acc.reshape(tile_h, w_out, cout).astype(o_ref.dtype)
+
+
+def conv2d_pallas(x, w, *, tile_h: int = 8, interpret: bool = True):
+    """x: [B, H_in, W_in, Cin] (pre-padded); w: [kh, kw, Cin, Cout].
+
+    VALID convolution, stride 1.  Returns [B, H_out, W_out, Cout].
+    """
+    B, H_in, W_in, cin = x.shape
+    kh, kw, _, cout = w.shape
+    H_out, W_out = H_in - kh + 1, W_in - kw + 1
+    tile_h = min(tile_h, H_out)
+    assert H_out % tile_h == 0, f"H_out {H_out} % tile_h {tile_h}"
+    n_tiles = H_out // tile_h
+
+    kernel = functools.partial(_conv_kernel, kh=kh, kw=kw, tile_h=tile_h,
+                               w_out=W_out, cin=cin, cout=cout)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_tiles),
+        in_specs=[
+            # full-H block per batch: halo rows are pl.ds-sliced in-kernel
+            pl.BlockSpec((1, H_in, W_in, cin), lambda b, t: (b, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, cout), lambda b, t: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_h, W_out, cout), lambda b, t: (b, t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H_out, W_out, cout), x.dtype),
+        interpret=interpret,
+    )(x, w)

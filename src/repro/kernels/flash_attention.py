@@ -1,0 +1,103 @@
+"""Fused flash-attention Pallas TPU kernel.
+
+Grid: (batch*heads, q_blocks, kv_blocks) — kv innermost ("arbitrary"
+semantics, sequential per core) so the online-softmax running stats live in
+VMEM scratch across kv steps and the fp32 score block NEVER round-trips to
+HBM (the XLA fallback materializes it; see EXPERIMENTS.md §Perf for the
+quantified delta).  Block shapes default to 128x128 — MXU-tile aligned.
+
+Causal handling: blocks strictly above the diagonal are skipped via
+``pl.when`` (no MXU work issued); the diagonal block applies an iota mask.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale: float, causal: bool, block_q: int, block_k: int,
+                  n_k: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                   # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)                   # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)                   # [bk, hv]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                            (block_q, block_k), 0)
+            k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                            (block_q, block_k), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=1)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr[:, None] + \
+            jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())))
+
+    if causal:
+        # skip blocks strictly above the diagonal: no MXU work issued
+        pl.when((kj * block_k) < ((qi + 1) * block_q))(_body)
+    else:
+        _body()
+
+    @pl.when(kj == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           scale: float | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True):
+    """q, k, v: [BH, S, hd] (batch*heads folded).  Returns [BH, S, hv]."""
+    BH, S, hd = q.shape
+    hv = v.shape[-1]
+    if scale is None:
+        scale = hd ** -0.5
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    n_q, n_k = S // block_q, S // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),           # running max
+            pltpu.VMEM((block_q,), jnp.float32),           # running sum
+            pltpu.VMEM((block_q, hv), jnp.float32),        # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

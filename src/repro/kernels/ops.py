@@ -1,0 +1,63 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These are the entry points models/benchmarks use; each handles layout
+(GQA head expansion, padding) and dispatches to the kernel.  ``interpret``
+defaults to True because this container is CPU-only; on real TPU the same
+call sites pass interpret=False.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d import conv2d_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q: [B, S, H, hd]; k, v: [B, S, KV, hd] (GQA expanded here)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    hv = v.shape[-1]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, hv)
+    o = flash_attention_pallas(qf, kf, vf, causal=causal,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+    return o.reshape(B, H, S, hv).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = True):
+    """Mamba2 SSD scan: x [b,S,nh,hp], dt [b,S,nh], A [nh], B/C [b,S,1,ds]."""
+    return ssd_scan_pallas(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "tile_h",
+                                             "interpret"))
+def conv2d(x, w, *, stride: int = 1, padding: str = "SAME", tile_h: int = 8,
+           interpret: bool = True):
+    """NHWC conv via the Pallas kernel (stride-1 path); strided convs fall
+    back to XLA (they are 1x1 projections in ResNet, already MXU-shaped)."""
+    kh, kw = w.shape[:2]
+    if stride != 1:
+        return jax.lax.conv_general_dilated(
+            x, w, (stride, stride), padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if padding == "SAME" and (kh > 1 or kw > 1):
+        x = jnp.pad(x, ((0, 0), (kh // 2, (kh - 1) // 2),
+                        (kw // 2, (kw - 1) // 2), (0, 0)))
+    return conv2d_pallas(x, w, tile_h=tile_h, interpret=interpret)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q,k,v: [B, S, H, hd] (same H — GQA expansion happens in ops.py)."""
+    B, S, H, hd = q.shape
+    if scale is None:
+        scale = hd ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C):
+    """Sequential (non-chunked) SSD recurrence — the exact oracle.
+
+    x: [b, S, nh, hp]; dt: [b, S, nh]; A: [nh]; B, C: [b, S, ng, ds].
+    Returns y: [b, S, nh, hp] fp32.
+    """
+    b, S, nh, hp = x.shape
+    ng, ds = B.shape[-2], B.shape[-1]
+    rep = nh // ng
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)     # [b,S,nh,ds]
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp                               # [b,nh,hp],[b,nh],[b,nh,ds]x2
+        decay = jnp.exp(dtt * A)                            # [b,nh]
+        state = state * decay[..., None, None] + \
+            jnp.einsum("bhs,bhp->bhps", Bt * dtt[..., None], xt)
+        y = jnp.einsum("bhs,bhps->bhp", Ct, state)
+        return state, y
+
+    state0 = jnp.zeros((b, nh, hp, ds), jnp.float32)
+    _, ys = jax.lax.scan(step, state0,
+                         (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+                          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3)
+
+
+def conv2d_ref(x, w, *, stride: int = 1):
+    """x: [B, H, W, Cin] (already padded); w: [kh, kw, Cin, Cout]; VALID."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))

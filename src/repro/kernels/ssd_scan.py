@@ -1,0 +1,96 @@
+"""Fused Mamba2 SSD chunk-scan Pallas TPU kernel.
+
+Grid: (batch, heads, chunks) — chunks innermost/sequential; the recurrent
+state [hp, ds] lives in VMEM scratch across chunk steps.  Per chunk the
+kernel computes the decay matrix L (segment sums), the dual masked matmul
+(C B^T ⊙ L) @ (x·dt), the cross-chunk state contribution, and the state
+update — none of the fp32 [Q,Q] intermediates ever reach HBM (the XLA
+fallback materializes them per chunk).
+
+Assumes ngroups == 1 (the assigned mamba2/zamba2 configs): B/C are indexed
+per (batch, chunk) and shared across heads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr,
+                *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)       # [Q, hp]
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)     # [Q]
+    A = a_ref[0]                                 # scalar (negative)
+    B = b_ref[0, 0].astype(jnp.float32)          # [Q, ds]
+    C = c_ref[0, 0].astype(jnp.float32)          # [Q, ds]
+
+    dA = dt * A                                  # [Q]
+    cum = jnp.cumsum(dA)                         # [Q]
+    # decay matrix L[i,j] = exp(cum_i - cum_j) for i >= j else 0
+    diff = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+
+    xdt = x * dt[:, None]                        # [Q, hp]
+    CB = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))   # [Q, Q]
+    y_diag = jax.lax.dot_general(CB * L, xdt, (((1,), (0,)), ((), ())))
+
+    state = state_scr[...]                       # [hp, ds]
+    decay_in = jnp.exp(cum)                      # [Q]
+    y_off = jax.lax.dot_general(C * decay_in[:, None], state,
+                                (((1,), (1,)), ((), ())))      # [Q, hp]
+    y_ref[0, 0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: state' = state * exp(sum dA) + sum_q decay_end_q * dt_q x_q B_q^T
+    decay_end = jnp.exp(cum[-1] - cum)           # [Q]
+    contrib = jax.lax.dot_general(xdt * decay_end[:, None], B,
+                                  (((0,), (0,)), ((), ())))    # [hp, ds]
+    state_scr[...] = state * jnp.exp(cum[-1]) + contrib
+
+
+def ssd_scan_pallas(x, dt, A, B, C, *, chunk: int = 128,
+                    interpret: bool = True):
+    """x: [b, S, nh, hp]; dt: [b, S, nh]; A: [nh]; B, C: [b, S, 1, ds].
+
+    Returns y: [b, S, nh, hp] (x.dtype).
+    """
+    b, S, nh, hp = x.shape
+    ds = B.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, f"{S} % {Q}"
+    nc = S // Q
+    # layouts: x -> [b, nh, nc, Q, hp]; dt -> [b, nh, nc, Q]; B/C -> [b, nc, Q, ds]
+    xr = x.transpose(0, 2, 1, 3).reshape(b, nh, nc, Q, hp)
+    dtr = dt.transpose(0, 2, 1).reshape(b, nh, nc, Q)
+    Br = B[:, :, 0].reshape(b, nc, Q, ds)
+    Cr = C[:, :, 0].reshape(b, nc, Q, ds)
+
+    kernel = functools.partial(_ssd_kernel, chunk=Q)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, hp), lambda bi, h, c: (bi, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda bi, h, c: (bi, h, c, 0)),
+            pl.BlockSpec((1,), lambda bi, h, c: (h,)),
+            pl.BlockSpec((1, 1, Q, ds), lambda bi, h, c: (bi, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, ds), lambda bi, h, c: (bi, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Q, hp), lambda bi, h, c: (bi, h, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nh, nc, Q, hp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((hp, ds), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, A.astype(jnp.float32), Br, Cr)
+    return y.reshape(b, nh, S, hp).transpose(0, 2, 1, 3)

@@ -1,0 +1,57 @@
+"""Serving driver: batched requests through the continuous-batching engine.
+
+  python -m repro.launch.serve --arch stablelm-1.6b --requests 8 --slots 4
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import api
+from repro.serving.engine import Request, ServingEngine
+
+
+def serve(arch: str, n_requests: int = 8, slots: int = 4, max_len: int = 128,
+          prompt_len: int = 8, max_new: int = 16, seed: int = 0):
+    cfg = get_config(arch).reduced()
+    model = api.build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed), max_seq=max_len)
+    engine = ServingEngine(model, slots=slots, max_len=max_len)
+    engine.load(params)
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        rng.integers(2, prompt_len + 1)).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n_requests)]
+    for r in reqs:
+        engine.submit(r)
+    stats = engine.run_until_drained()
+    done = sum(r.done for r in reqs)
+    lat = [r.finished_s - r.arrived_s for r in reqs if r.finished_s]
+    stats.update(completed=done,
+                 mean_latency_s=float(np.mean(lat)) if lat else 0.0)
+    return reqs, stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+    reqs, stats = serve(args.arch, n_requests=args.requests, slots=args.slots,
+                        max_len=args.max_len, max_new=args.max_new)
+    print(f"[serve] {stats['completed']}/{len(reqs)} done, "
+          f"{stats['decoded_tokens']} tokens, {stats['tok_per_s']:.1f} tok/s, "
+          f"mean latency {stats['mean_latency_s'] * 1e3:.0f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,277 @@
+"""Unified per-family model API.
+
+``Model`` bundles init / loss / prefill / decode for one architecture family
+so the launcher, dry-run, trainer and server never branch on family.
+
+``make_train_step`` / ``make_serve_step`` build the jit-able step functions
+plus the matching in/out sharding trees — the single source of truth used by
+launch/train.py, launch/serve.py and launch/dryrun.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import mamba, resnet, transformer, whisper, zamba
+from repro.models.dist import Dist
+from repro.models.sharding import param_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable            # (key, max_seq) -> params
+    loss: Callable             # (params, batch, dist) -> (loss, metrics)
+    prefill: Optional[Callable]    # (params, batch, dist) -> (logits, cache)
+    decode: Optional[Callable]     # (params, batch, cache, dist) -> (logits, cache)
+    init_cache: Optional[Callable]  # (batch, max_len) -> cache
+
+
+def _stub_embeds_shape(cfg, batch):
+    if cfg.family == "vlm":
+        return (batch, cfg.num_patches, cfg.d_model)
+    if cfg.family == "audio":
+        return (batch, cfg.num_frames, cfg.d_model)
+    return None
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def init(key, max_seq=0):
+            return transformer.init_params(key, cfg)
+
+        def loss(params, batch, dist=None):
+            return transformer.loss_fn(params, cfg, batch["tokens"], batch["labels"],
+                                       dist, batch.get("prefix_embeds"))
+
+        def prefill(params, batch, dist=None):
+            return transformer.prefill(params, cfg, batch["tokens"], dist,
+                                       batch.get("prefix_embeds"))
+
+        def decode(params, batch, cache, dist=None):
+            return transformer.decode_step(params, cfg, batch["tokens"], cache, dist)
+
+        return Model(cfg, init, loss, prefill, decode,
+                     functools.partial(transformer.init_cache, cfg))
+    if fam == "ssm":
+        return Model(
+            cfg,
+            lambda key, max_seq=0: mamba.init_params(key, cfg),
+            lambda params, batch, dist=None: mamba.loss_fn(
+                params, cfg, batch["tokens"], batch["labels"], dist),
+            lambda params, batch, dist=None: mamba.prefill(params, cfg, batch["tokens"], dist),
+            lambda params, batch, cache, dist=None: mamba.decode_step(
+                params, cfg, batch["tokens"], cache, dist),
+            functools.partial(mamba.init_cache, cfg))
+    if fam == "hybrid":
+        return Model(
+            cfg,
+            lambda key, max_seq=0: zamba.init_params(key, cfg),
+            lambda params, batch, dist=None: zamba.loss_fn(
+                params, cfg, batch["tokens"], batch["labels"], dist),
+            lambda params, batch, dist=None: zamba.prefill(params, cfg, batch["tokens"], dist),
+            lambda params, batch, cache, dist=None: zamba.decode_step(
+                params, cfg, batch["tokens"], cache, dist),
+            functools.partial(zamba.init_cache, cfg))
+    if fam == "audio":
+        def init(key, max_seq=4096):
+            return whisper.init_params(key, cfg, max_seq=max_seq)
+
+        def loss(params, batch, dist=None):
+            return whisper.loss_fn(params, cfg, batch["tokens"], batch["labels"],
+                                   batch["frames"], dist)
+
+        def prefill(params, batch, dist=None):
+            _, logits, kvs = whisper.forward(params, cfg, batch["tokens"],
+                                             batch["frames"], dist, collect_kv=True)
+            self_kv, cross_kv = kvs
+            cache = {"len": jnp.asarray(batch["tokens"].shape[1], jnp.int32),
+                     "self": {"k": self_kv[0], "v": self_kv[1]},
+                     "cross": {"k": cross_kv[0], "v": cross_kv[1]}}
+            return logits, cache
+
+        def decode(params, batch, cache, dist=None):
+            return whisper.decode_step(params, cfg, batch["tokens"], cache, dist)
+
+        return Model(cfg, init, loss, prefill, decode,
+                     functools.partial(whisper.init_cache, cfg))
+    if fam == "cnn":
+        return Model(
+            cfg,
+            lambda key, max_seq=0: resnet.init_params(key, cfg),
+            lambda params, batch, dist=None: resnet.loss_fn(
+                params, cfg, batch["images"], batch["labels"], dist),
+            None, None, None)
+    raise ValueError(f"unknown family {fam}")
+
+
+# --- input specs (ShapeDtypeStruct stand-ins; never allocates) -----------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, dist: Optional[Dist] = None) -> Dict:
+    """Abstract inputs for one (arch, shape) cell — the dry-run contract."""
+    B, S = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    dt = L.dtype_of(cfg)
+
+    def _dp_n():
+        n = 1
+        sizes = dict(zip(dist.mesh.axis_names, dist.mesh.devices.shape))
+        for a in dist.dp_axes:
+            n *= sizes[a]
+        return n
+
+    def sharded(spec_axes, shp, dtype):
+        if dist is None:
+            return sd(shp, dtype)
+        axes = list(spec_axes)
+        # batch dim is axis 0 by convention: replicate when indivisible (B=1)
+        if axes and axes[0] is not None and shp[0] % _dp_n() != 0:
+            axes[0] = None
+        return sd(shp, dtype, sharding=NamedSharding(dist.mesh, P(*axes)))
+
+    dp = dist.dp if dist is not None else None
+    if cfg.family == "cnn":
+        r = cfg.image_size
+        return {"images": sharded((dp,), (B, r, r, 3), dt),
+                "labels": sharded((dp,), (B,), jnp.int32)}
+    batch: Dict[str, Any] = {}
+    if shape.kind == "train":
+        text = S - (cfg.num_patches if cfg.family == "vlm" else 0)
+        batch["tokens"] = sharded((dp,), (B, text), jnp.int32)
+        batch["labels"] = sharded((dp,), (B, text), jnp.int32)
+    elif shape.kind == "prefill":
+        text = S - (cfg.num_patches if cfg.family == "vlm" else 0)
+        batch["tokens"] = sharded((dp,), (B, text), jnp.int32)
+    else:  # decode: one token in
+        batch["tokens"] = sharded((dp,), (B, 1), jnp.int32)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        batch["prefix_embeds"] = sharded((dp,), (B, cfg.num_patches, cfg.d_model), dt)
+    if cfg.family == "audio" and shape.kind != "decode":
+        batch["frames"] = sharded((dp,), (B, cfg.num_frames, cfg.d_model), dt)
+    return batch
+
+
+def cache_specs(model: Model, shape: ShapeConfig, dist: Optional[Dist]) -> Any:
+    """Abstract KV/SSM cache for decode cells (sized to shape.seq_len)."""
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    if dist is None:
+        return cache_shape
+    specs = cache_sharding_specs(cache_shape, dist)
+    return jax.tree_util.tree_map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                          sharding=NamedSharding(dist.mesh, s)),
+        cache_shape, specs)
+
+
+def cache_sharding_specs(cache_tree, dist: Dist):
+    """Caches shard batch over dp; KV-head dim over model when divisible.
+
+    Layouts: [L, B, S, KV, hd] (gqa), [L, B, S, r] (mla), ssm state
+    [L, B, nh, hp, ds], conv [L, B, w, C].
+    """
+    sizes = dict(zip(dist.mesh.axis_names, dist.mesh.devices.shape))
+    dp_n = 1
+    for a in (dist.dp_axes if isinstance(dist.dp, tuple) else (dist.dp,)):
+        dp_n *= sizes[a]
+    mdl_n = sizes.get(dist.model_axis, 1)
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        shp = leaf.shape
+        # find batch dim: axis 1 for stacked [L, B, ...]; axis 0 otherwise
+        axes = [None] * leaf.ndim
+        bdim = 1 if leaf.ndim >= 2 else 0
+        if shp[bdim] % dp_n == 0 and shp[bdim] > 1:
+            axes[bdim] = dist.dp
+        name = [str(getattr(q, "key", "")) for q in path]
+        if leaf.ndim == 5:
+            # gqa KV cache [L,B,S,KV,hd] or head-major [L,B,KV,S,hd]
+            # / ssm state [L,B,nh,hp,ds]
+            if "state" in name:
+                hdim, sdim = 2, None
+            else:
+                sdim = 2 if shp[2] >= shp[3] else 3     # seq is the big dim
+                hdim = 3 if sdim == 2 else 2
+            if shp[hdim] % mdl_n == 0:
+                axes[hdim] = dist.model_axis
+            elif sdim is not None and shp[sdim] % mdl_n == 0:
+                # KV heads indivisible (e.g. 8 heads on 16-way TP): shard the
+                # SEQUENCE dim over model instead — flash-decode partial
+                # softmax; XLA inserts the cross-shard max/sum combine.
+                axes[sdim] = dist.model_axis
+        elif leaf.ndim == 4 and any(k in ("c_kv", "k_rope") for k in name):
+            # MLA compressed cache [L,B,S,r]: latent is per-token, shard S
+            if shp[2] % mdl_n == 0:
+                axes[2] = dist.model_axis
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+# --- step builders ---------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    params: Any
+    opt: Any
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt), None),
+    lambda _, c: TrainState(params=c[0], opt=c[1]))
+
+
+def make_train_step(model: Model, optimizer, dist: Optional[Dist] = None,
+                    grad_transform=None):
+    """optimizer: repro.optim.Optimizer bundle.  grad_transform: optional
+    (grads -> grads) hook, e.g. int8 compressed cross-pod psum."""
+    def train_step(state: TrainState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, dist), has_aux=True)(state.params)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt, opt_metrics = optimizer.apply(
+            state.params, grads, state.opt)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_serve_step(model: Model, kind: str, dist: Optional[Dist] = None):
+    if kind == "prefill":
+        def serve_step(params, batch):
+            return model.prefill(params, batch, dist)
+    else:
+        def serve_step(params, batch, cache):
+            return model.decode(params, batch, cache, dist)
+    return serve_step
+
+
+# --- sharding trees for jit in/out ----------------------------------------------------
+
+def state_specs(model: Model, optimizer, dist: Dist, max_seq: int = 4096):
+    """PartitionSpec trees + abstract shapes for TrainState.
+
+    Optimizer state specs come from the optimizer bundle (AdamW moments mirror
+    params; Adafactor factored stats drop the reduced dim)."""
+    params_shape = jax.eval_shape(
+        functools.partial(model.init, max_seq=max_seq), jax.random.PRNGKey(0))
+    pspecs = param_specs(params_shape, dist)
+    opt_shape = jax.eval_shape(optimizer.init, params_shape)
+    opt_specs = optimizer.specs(pspecs, params_shape)
+    state_specs_ = TrainState(params=pspecs, opt=opt_specs)
+    state_shape = TrainState(params=params_shape, opt=opt_shape)
+    return state_specs_, state_shape

@@ -1,0 +1,44 @@
+"""Distribution context threaded through model code."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Dist:
+    """Mesh + axis-name bundle.
+
+    dp_axes:   batch-sharding axes, ('data',) or ('pod', 'data').
+    model_axis: TP/EP axis.
+    fsdp_axis: parameter/optimizer-state sharding axis (ZeRO-3 style).
+    use_ep:    route MoE through the shard_map expert-parallel path.
+    """
+
+    mesh: Any
+    dp_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    fsdp_axis: Optional[str] = "data"
+    use_ep: bool = True
+
+    @property
+    def dp(self):
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    def axis_size(self, name) -> int:
+        if name is None:
+            return 1
+        names = name if isinstance(name, tuple) else (name,)
+        n = 1
+        for a in names:
+            n *= dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[a]
+        return n
+
+
+def make_dist(mesh, multi_pod: bool | None = None) -> Dist:
+    names = tuple(mesh.axis_names)
+    if multi_pod is None:
+        multi_pod = "pod" in names
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    return Dist(mesh=mesh, dp_axes=dp_axes)

@@ -1,0 +1,349 @@
+"""Core neural-net layers, pure functional JAX.
+
+Conventions:
+  * params are nested dicts of jnp arrays; ``init_*`` builds them, ``apply``-style
+    functions consume them.
+  * activations are [B, S, ...]; attention uses BSHD layout.
+  * matmuls run in the config dtype (bf16); softmax/norm statistics in fp32.
+  * the chunked `flash_attention` is the XLA-level oracle matching the Pallas
+    kernel in ``repro.kernels.flash_attention`` (same online-softmax math).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def _norm_init(key, shape):
+    return jnp.ones(shape, jnp.float32)
+
+
+def dense_init(key, shape, dtype, scale: float = 0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# --- normalization -------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def init_layernorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+def norm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    return layernorm(p, x, eps) if "bias" in p else rmsnorm(p, x, eps)
+
+
+# --- rotary embeddings -----------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, S, H, hd]; positions: [B, S] or [S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- chunked flash attention (XLA path; oracle for the Pallas kernel) -------------
+
+NEG_INF = -1e30
+
+
+def _block_mask(q_pos, k_pos, prefix_len: int):
+    """Causal mask with an optional bidirectional prefix (PaliGemma)."""
+    m = k_pos[None, :] <= q_pos[:, None]
+    if prefix_len:
+        m = m | (k_pos[None, :] < prefix_len)
+    return m
+
+
+def flash_attention(q, k, v, *, scale: float, prefix_len: int = 0,
+                    chunk: int = 1024) -> jnp.ndarray:
+    """Causal chunked attention with online softmax.
+
+    q: [B, S, H, hd]; k, v: [B, S, KV, hd(v)].  GQA via head grouping (never
+    materializes repeated KV).  The python loop over query chunks is STATIC, so
+    query chunk ``i``'s inner scan covers exactly its ``i+1`` causally-visible
+    KV chunks — compiled FLOPs match true causal FLOPs (no masked-away waste),
+    which keeps the roofline compute term honest.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    hv = v.shape[-1]
+    G = H // KV
+    c = min(chunk, S)
+    S_real = S
+    if S % c:
+        # pad to a chunk multiple; padded KV positions sit above every real
+        # query position, so the causal mask hides them for free.
+        pad = c - S % c
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    n = S // c
+
+    qg = q.reshape(B, n, c, KV, G, hd)
+    outs = []
+    for i in range(n):
+        qi = qg[:, i]                                     # [B, c, KV, G, hd]
+        q_pos = i * c + jnp.arange(c)
+
+        def step(carry, k_lo, qi=qi, q_pos=q_pos):
+            # dynamic-slice the KV block in place — never materializes stacked
+            # prefix copies (flash semantics: read each block exactly once).
+            m_prev, l_prev, acc = carry
+            kj = jax.lax.dynamic_slice_in_dim(k, k_lo, c, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(v, k_lo, c, axis=1)
+            k_pos = k_lo + jnp.arange(c)
+            # bf16 operands, fp32 accumulation: MXU-native, no fp32 KV copies
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _block_mask(q_pos, k_pos, prefix_len)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vj.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        carry = (jnp.full((B, KV, G, c), NEG_INF, jnp.float32),
+                 jnp.zeros((B, KV, G, c), jnp.float32),
+                 jnp.zeros((B, KV, G, c, hv), jnp.float32))
+        n_blk = i + 1                                     # causal horizon, STATIC
+        if n_blk == 1:
+            carry, _ = step(carry, jnp.asarray(0, jnp.int32))
+        else:
+            carry, _ = jax.lax.scan(step, carry, jnp.arange(n_blk) * c)
+        m_f, l_f, acc = carry
+        o = acc / jnp.maximum(l_f[..., None], 1e-30)
+        outs.append(o.transpose(0, 3, 1, 2, 4).reshape(B, c, H, hv))
+    out = jnp.concatenate(outs, axis=1).astype(q.dtype)
+    return out[:, :S_real]
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, scale: float) -> jnp.ndarray:
+    """Single-step decode: q [B, 1, H, hd]; caches [B, Smax, KV, hd]."""
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    hv = v_cache.shape[-1]
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(qg.dtype),
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(k_cache.shape[1])
+    s = jnp.where((pos < cache_len)[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hv).astype(q.dtype)
+
+
+# --- GQA attention block ----------------------------------------------------------
+
+def init_attention(key, cfg) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), dt),
+        "wk": dense_init(ks[1], (d, kv, hd), dt),
+        "wv": dense_init(ks[2], (d, kv, hd), dt),
+        "wo": dense_init(ks[3], (h, hd, d), dt, scale=0.02 / max(cfg.num_layers, 1) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dt)
+        p["bk"] = jnp.zeros((kv, hd), dt)
+        p["bv"] = jnp.zeros((kv, hd), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    return p
+
+
+def _qkv(p, cfg, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q, k = rmsnorm(p["q_norm"], q, cfg.norm_eps), rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(p: Params, cfg, x, positions, prefix_len: int = 0,
+                    kv_override=None) -> jnp.ndarray:
+    """Full-sequence (train/prefill) attention.  kv_override: (k, v) for cross-attn."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    if kv_override is not None:
+        k, v = kv_override
+        scale = cfg.head_dim ** -0.5
+        # cross attention: non-causal over the encoder sequence
+        s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+        o = jnp.einsum("bhqs,bshd->bqhd", jax.nn.softmax(s, -1), v.astype(jnp.float32)).astype(x.dtype)
+    else:
+        o = flash_attention(q, k, v, scale=cfg.head_dim ** -0.5, prefix_len=prefix_len)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def attention_encode(p: Params, cfg, x, positions) -> jnp.ndarray:
+    """Bidirectional (encoder) attention."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    scale = cfg.head_dim ** -0.5
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    o = jnp.einsum("bhqs,bshd->bqhd", jax.nn.softmax(s, -1), v.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def attention_prefill(p: Params, cfg, x, positions, prefix_len: int = 0) -> tuple:
+    """Prefill: full-sequence attention that also emits (k, v) for the cache."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    o = flash_attention(q, k, v, scale=cfg.head_dim ** -0.5, prefix_len=prefix_len)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), (k, v)
+
+
+def decode_attention_hm(q, k_cache, v_cache, cache_len, *, scale: float):
+    """Head-major decode: caches [B, KV, Smax, hd] — the dot consumes the
+    cache in storage order (no per-step transpose of the whole cache)."""
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[1]
+    G = H // KV
+    hv = v_cache.shape[-1]
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache.astype(qg.dtype),
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(k_cache.shape[2])
+    s = jnp.where((pos < cache_len)[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hv).astype(q.dtype)
+
+
+def attention_decode(p: Params, cfg, x, cache, cache_len) -> tuple:
+    """Single-token decode.  cache layout per cfg.cache_layout:
+    seq_major {"k": [B,Smax,KV,hd]} | head_major {"k": [B,KV,Smax,hd]}."""
+    positions = jnp.full((x.shape[0], 1), cache_len, jnp.int32)
+    q, k, v = _qkv(p, cfg, x, positions)
+    if cfg.cache_layout == "head_major":
+        k_t = k.transpose(0, 2, 1, 3).astype(cache["k"].dtype)   # [B,KV,1,hd]
+        v_t = v.transpose(0, 2, 1, 3).astype(cache["v"].dtype)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_t, cache_len, axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_t, cache_len, axis=2)
+        o = decode_attention_hm(q, k_cache, v_cache, cache_len + 1,
+                                scale=cfg.head_dim ** -0.5)
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1)
+        o = decode_attention(q, k_cache, v_cache, cache_len + 1,
+                             scale=cfg.head_dim ** -0.5)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, layers: int) -> Params:
+    dt = dtype_of(cfg)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    if cfg.cache_layout == "head_major":
+        shape = (layers, batch, kv, max_len, hd)
+    else:
+        shape = (layers, batch, max_len, kv, hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+# --- feed-forward ------------------------------------------------------------------
+
+def init_ffn(key, cfg, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], (d, f), dt),
+         "w_out": dense_init(ks[1], (f, d), dt, scale=0.02 / max(cfg.num_layers, 1) ** 0.5)}
+    if cfg.gated_mlp:
+        p["w_gate"] = dense_init(ks[2], (d, f), dt)
+    return p
+
+
+def _act(cfg, x):
+    return jax.nn.silu(x) if cfg.act_fn == "silu" else jax.nn.gelu(x)
+
+
+def ffn_block(p: Params, cfg, x) -> jnp.ndarray:
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    if "w_gate" in p:
+        h = _act(cfg, jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * h
+    else:
+        h = _act(cfg, h)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+
+
+# --- embeddings / head ----------------------------------------------------------------
+
+def init_embed(key, cfg) -> Params:
+    dt = dtype_of(cfg)
+    return {"embed_w": dense_init(key, (cfg.vocab_size, cfg.d_model), dt,
+                                  scale=1.0 / cfg.d_model ** 0.5)}
+
+
+def embed(p: Params, tokens) -> jnp.ndarray:
+    return jnp.take(p["embed_w"], tokens, axis=0)
+
+
+def unembed(p_head: Optional[Params], p_embed: Params, x) -> jnp.ndarray:
+    w = p_embed["embed_w"].T if p_head is None else p_head["head_w"]
+    return jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token NLL in fp32; logits [B,S,V], labels [B,S] (−1 = pad/ignore)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

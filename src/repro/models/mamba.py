@@ -1,0 +1,93 @@
+"""Mamba2 LM (pure SSM, attention-free)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssd
+from repro.models.sharding import shard_act
+from repro.models.transformer import _remat
+
+Params = Dict[str, Any]
+
+
+def init_params(key, cfg) -> Params:
+    ks = jax.random.split(key, 3)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln": L.init_rmsnorm(cfg.d_model), "mix": ssd.init_mamba_block(k2, cfg)}
+
+    p = {
+        "embed": L.init_embed(ks[0], cfg),
+        "layers": jax.vmap(one)(jax.random.split(ks[1], cfg.num_layers)),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = {"head_w": L.dense_init(ks[2], (cfg.d_model, cfg.vocab_size),
+                                            L.dtype_of(cfg))}
+    return p
+
+
+def forward(params: Params, cfg, tokens, dist=None, collect_cache: bool = False):
+    x = L.embed(params["embed"], tokens)
+    if dist is not None:
+        x = shard_act(x, dist, dist.dp, None, None)
+
+    def body(x, lp):
+        out = ssd.mamba_block(lp["mix"], cfg, L.norm(lp["ln"], x, cfg.norm_eps),
+                              return_cache=collect_cache)
+        if collect_cache:
+            dx, cache_l = out
+        else:
+            dx, cache_l = out, None
+        x = x + dx
+        if dist is not None:
+            x = shard_act(x, dist, dist.dp, None, None)
+        return x, cache_l
+
+    x, caches = jax.lax.scan(_remat(body, cfg), x, params["layers"])
+    h = L.norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params.get("head"), params["embed"], h)
+    return h, logits, caches
+
+
+def loss_fn(params: Params, cfg, tokens, labels, dist=None):
+    _, logits, _ = forward(params, cfg, tokens, dist)
+    loss = L.cross_entropy(logits[:, :-1], labels[:, 1:])
+    return loss, {"nll": loss}
+
+
+def init_cache(cfg, batch: int, max_len: int) -> Params:
+    del max_len  # constant-size recurrent state: the SSM long-context win
+    return {"len": jnp.zeros((), jnp.int32),
+            "ssm": ssd.init_ssm_cache(cfg, batch, cfg.num_layers)}
+
+
+def decode_step(params: Params, cfg, tokens, cache, dist=None):
+    x = L.embed(params["embed"], tokens)
+
+    def body(x, inp):
+        lp, cl = inp
+        dx, new_c = ssd.mamba_decode(lp["mix"], cfg, L.norm(lp["ln"], x, cfg.norm_eps), cl)
+        return x + dx, new_c
+
+    x, new_ssm = jax.lax.scan(body, x, (params["layers"], cache["ssm"]))
+    h = L.norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params.get("head"), params["embed"], h)
+    return logits, {"len": cache["len"] + 1, "ssm": new_ssm}
+
+
+def prefill(params: Params, cfg, tokens, dist=None):
+    """SSM prefill: chunked scan; the per-layer final recurrent state and conv
+    tail come out of the same pass (exact, no replay)."""
+    _, logits, caches = forward(params, cfg, tokens, dist, collect_cache=True)
+    conv_tail, final_state = caches
+    cache = {"len": jnp.asarray(tokens.shape[1], jnp.int32),
+             "ssm": {"conv": conv_tail, "state": final_state}}
+    return logits, cache

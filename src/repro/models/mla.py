@@ -1,0 +1,133 @@
+"""Multi-head Latent Attention (DeepSeek V2/V3).
+
+Two execution modes:
+  * train/prefill — decompress the KV latent to per-head K/V and run the
+    chunked flash path (exact).
+  * decode (absorbed) — the famous inference trick: fold W_UK into the query
+    and W_UV into the output so the per-token cache is just the compressed
+    latent  c_kv [kv_lora] + k_rope [rope_dim]  (e.g. 512+64 for V3 instead of
+    128 heads x 256 = 32768 floats: a 57x KV-cache shrink).  This is the
+    memory-roofline lever exercised in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_mla(key, cfg) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    p = {}
+    if qr:
+        p["wq_a"] = L.dense_init(ks[0], (d, qr), dt)
+        p["q_a_norm"] = L.init_rmsnorm(qr)
+        p["wq_b"] = L.dense_init(ks[1], (qr, h, nope + rope_d), dt)
+    else:
+        p["wq"] = L.dense_init(ks[0], (d, h, nope + rope_d), dt)
+    p["wkv_a"] = L.dense_init(ks[2], (d, kvr + rope_d), dt)
+    p["kv_a_norm"] = L.init_rmsnorm(kvr)
+    p["wkv_b"] = L.dense_init(ks[3], (kvr, h, nope + vd), dt)
+    p["wo"] = L.dense_init(ks[4], (h, vd, d), dt, scale=0.02 / max(cfg.num_layers, 1) ** 0.5)
+    return p
+
+
+def _project_q(p, cfg, x, positions):
+    nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        qa = L.rmsnorm(p["q_a_norm"], jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", qa, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p, cfg, x, positions):
+    kvr, rope_d = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv = L.rmsnorm(p["kv_a_norm"], kv[..., :kvr], cfg.norm_eps)
+    k_rope = L.apply_rope(kv[..., kvr:][:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,rope]
+    return c_kv, k_rope
+
+
+def mla_block(p, cfg, x, positions, prefix_len: int = 0) -> jnp.ndarray:
+    """Train/prefill: decompress latent, run flash attention."""
+    nope, vd = cfg.qk_nope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _project_q(p, cfg, x, positions)
+    c_kv, k_rope = _project_kv_latent(p, cfg, x, positions)
+    kv_up = jnp.einsum("bsr,rhk->bshk", c_kv, p["wkv_b"])
+    k_nope, v = kv_up[..., :nope], kv_up[..., nope:]
+    h = cfg.num_heads
+    k_rope_b = jnp.broadcast_to(k_rope, (*k_rope.shape[:2], h, k_rope.shape[-1]))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    scale = (nope + cfg.qk_rope_head_dim) ** -0.5
+    o = L.flash_attention(q, k, v, scale=scale, prefix_len=prefix_len)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def mla_prefill(p, cfg, x, positions, prefix_len: int = 0) -> tuple:
+    """Prefill emitting the COMPRESSED cache entries (c_kv, k_rope)."""
+    nope = cfg.qk_nope_head_dim
+    q_nope, q_rope = _project_q(p, cfg, x, positions)
+    c_kv, k_rope = _project_kv_latent(p, cfg, x, positions)
+    kv_up = jnp.einsum("bsr,rhk->bshk", c_kv, p["wkv_b"])
+    k_nope, v = kv_up[..., :nope], kv_up[..., nope:]
+    h = cfg.num_heads
+    k_rope_b = jnp.broadcast_to(k_rope, (*k_rope.shape[:2], h, k_rope.shape[-1]))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    scale = (nope + cfg.qk_rope_head_dim) ** -0.5
+    o = L.flash_attention(q, k, v, scale=scale, prefix_len=prefix_len)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, (c_kv, k_rope[:, :, 0])
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, num_layers: int) -> dict:
+    """Compressed cache: latent + rope key only."""
+    dt = L.dtype_of(cfg)
+    return {
+        "c_kv": jnp.zeros((num_layers, batch, max_len, cfg.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((num_layers, batch, max_len, cfg.qk_rope_head_dim), dt),
+    }
+
+
+def mla_decode(p, cfg, x, cache, cache_len) -> tuple:
+    """Absorbed single-token decode against the compressed cache.
+
+    cache: {"c_kv": [B, Smax, kvr], "k_rope": [B, Smax, rope]} (this layer's slice).
+    """
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    B = x.shape[0]
+    positions = jnp.full((B, 1), cache_len, jnp.int32)
+    q_nope, q_rope = _project_q(p, cfg, x, positions)          # [B,1,H,*]
+    c_new, k_rope_new = _project_kv_latent(p, cfg, x, positions)
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), cache_len, axis=1)
+    r_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new[:, :, 0].astype(cache["k_rope"].dtype), cache_len, axis=1)
+
+    w_uk = p["wkv_b"][..., :nope]                               # [kvr, H, nope]
+    w_uv = p["wkv_b"][..., nope:]                               # [kvr, H, vd]
+    # Absorb W_UK into q: q_lat [B,1,H,kvr]
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    s = jnp.einsum("bshr,btr->bhst", q_lat, c_cache.astype(jnp.float32))
+    s = s + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                       r_cache.astype(jnp.float32))
+    s = s * (nope + rope_d) ** -0.5
+    pos = jnp.arange(c_cache.shape[1])
+    s = jnp.where((pos <= cache_len)[None, None, None], s, L.NEG_INF)
+    attn = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", attn, c_cache.astype(jnp.float32))  # [B,1,H,kvr]
+    o = jnp.einsum("bshr,rhv->bshv", o_lat, w_uv.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+    return out, {"c_kv": c_cache, "k_rope": r_cache}

@@ -1,0 +1,100 @@
+"""ResNet-50 — the paper's own CNN-inference domain.
+
+NHWC bottleneck ResNet.  BatchNorm uses batch statistics in train mode and
+stored running statistics in inference mode (running stats are part of the
+state and updated by the train step).  The 3x3 convs are the hot spot the
+conv2d Pallas kernel targets.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Params = dict
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout), jnp.float32)
+    return (w * (2.0 / fan_in) ** 0.5).astype(dtype)
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32),
+            "mean": jnp.zeros((c,), jnp.float32), "var": jnp.ones((c,), jnp.float32)}
+
+
+def conv2d(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def batchnorm(p, x, train: bool, eps=1e-5):
+    if train:
+        mean = jnp.mean(x.astype(jnp.float32), axis=(0, 1, 2))
+        var = jnp.var(x.astype(jnp.float32), axis=(0, 1, 2))
+    else:
+        mean, var = p["mean"], p["var"]
+    out = (x.astype(jnp.float32) - mean) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+def _bottleneck_init(key, cin, cmid, stride, dtype):
+    ks = jax.random.split(key, 4)
+    cout = cmid * 4
+    p = {"conv1": {"conv": _conv_init(ks[0], 1, 1, cin, cmid, dtype)}, "bn1": _bn_init(cmid),
+         "conv2": {"conv": _conv_init(ks[1], 3, 3, cmid, cmid, dtype)}, "bn2": _bn_init(cmid),
+         "conv3": {"conv": _conv_init(ks[2], 1, 1, cmid, cout, dtype)}, "bn3": _bn_init(cout)}
+    if stride != 1 or cin != cout:
+        p["proj"] = {"conv": _conv_init(ks[3], 1, 1, cin, cout, dtype)}
+        p["bn_proj"] = _bn_init(cout)
+    return p
+
+
+def _bottleneck(p, x, stride, train):
+    h = jax.nn.relu(batchnorm(p["bn1"], conv2d(x, p["conv1"]["conv"]), train))
+    h = jax.nn.relu(batchnorm(p["bn2"], conv2d(h, p["conv2"]["conv"], stride), train))
+    h = batchnorm(p["bn3"], conv2d(h, p["conv3"]["conv"]), train)
+    if "proj" in p:
+        x = batchnorm(p["bn_proj"], conv2d(x, p["proj"]["conv"], stride), train)
+    return jax.nn.relu(x + h)
+
+
+def init_params(key, cfg) -> Params:
+    dt = L.dtype_of(cfg)
+    w = cfg.cnn_width
+    ks = jax.random.split(key, 2 + sum(cfg.cnn_stages))
+    p: Params = {"stem": {"conv": _conv_init(ks[0], 7, 7, 3, w, dt)}, "bn_stem": _bn_init(w)}
+    cin, i = w, 1
+    for s, n_blocks in enumerate(cfg.cnn_stages):
+        cmid = w * (2 ** s)
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and s > 0) else 1
+            p[f"stage{s}_block{b}"] = _bottleneck_init(ks[i], cin, cmid, stride, dt)
+            cin = cmid * 4
+            i += 1
+    p["fc"] = {"fc": L.dense_init(ks[i], (cin, cfg.vocab_size), dt)}
+    return p
+
+
+def forward(params: Params, cfg, images, train: bool = False):
+    """images: [B, H, W, 3] -> logits [B, classes]."""
+    x = images.astype(L.dtype_of(cfg))
+    x = jax.nn.relu(batchnorm(params["bn_stem"], conv2d(x, params["stem"]["conv"], 2), train))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME")
+    for s, n_blocks in enumerate(cfg.cnn_stages):
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and s > 0) else 1
+            x = _bottleneck(params[f"stage{s}_block{b}"], x, stride, train)
+    x = jnp.mean(x.astype(jnp.float32), axis=(1, 2))
+    return jnp.einsum("bd,dv->bv", x.astype(L.dtype_of(cfg)), params["fc"]["fc"]).astype(jnp.float32)
+
+
+def loss_fn(params: Params, cfg, images, labels, dist=None):
+    logits = forward(params, cfg, images, train=True)
+    loss = L.cross_entropy(logits[:, None, :], labels[:, None])
+    return loss, {"nll": loss}

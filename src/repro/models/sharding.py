@@ -1,0 +1,142 @@
+"""Parameter & activation sharding rules.
+
+One table maps (leaf name, rank) -> logical axes; logical axes map onto mesh
+axes through the ``Dist``; any dimension that doesn't divide its mesh axis
+falls back to replication (e.g. mamba2-130m's 24 SSD heads on a 16-way model
+axis).  This gives DP(+pod) × FSDP × TP/EP sharding:
+
+  * embeddings:   vocab over `model`, d_model over `data` (FSDP)
+  * attention:    heads over `model`, d_model over `data`
+  * FFN:          hidden over `model`, d_model over `data`
+  * MoE experts:  experts over `model` (EP), d_model over `data`
+  * SSD:          heads/channels over `model` when divisible, else replicated
+  * norms/biases: replicated
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.dist import Dist
+
+# (name, ndim) -> tuple of logical axes, one per dim.
+# logical axes: "fsdp" (d_model-ish dims), "tp" (head/hidden/vocab dims), None.
+_RULES = {
+    # embeddings / heads
+    ("embed_w", 2): ("tp", "fsdp"),          # [V, D]
+    ("head_w", 2): ("fsdp", "tp"),           # [D, V]
+    ("pos_w", 2): (None, "fsdp"),            # [S, D] learned positions
+    # gqa attention
+    ("wq", 3): ("fsdp", "tp", None),
+    ("wk", 3): ("fsdp", "tp", None),
+    ("wv", 3): ("fsdp", "tp", None),
+    ("wo", 3): ("tp", None, "fsdp"),
+    ("bq", 2): ("tp", None),
+    ("bk", 2): ("tp", None),
+    ("bv", 2): ("tp", None),
+    # mla
+    ("wq_a", 2): ("fsdp", "tp"),
+    ("wq_b", 3): ("fsdp", "tp", None),
+    ("wq", 3): ("fsdp", "tp", None),
+    ("wkv_a", 2): ("fsdp", "tp"),
+    ("wkv_b", 3): ("fsdp", "tp", None),
+    # mtp projection
+    ("proj", 2): ("fsdp", "tp"),
+    # dense ffn / moe shared
+    ("w_in", 2): ("fsdp", "tp"),
+    ("w_gate", 2): ("fsdp", "tp"),
+    ("w_out", 2): ("tp", "fsdp"),
+    # moe experts
+    ("w_in", 3): ("tp", "fsdp", None),
+    ("w_gate", 3): ("tp", "fsdp", None),
+    ("w_out", 3): ("tp", None, "fsdp"),
+    ("router", 2): ("fsdp", "tp"),
+    # ssd / mamba
+    ("in_z", 2): ("fsdp", "tp"),
+    ("in_xbc", 2): ("fsdp", "tp"),
+    ("in_dt", 2): ("fsdp", "tp"),
+    ("out_proj", 2): ("tp", "fsdp"),
+    ("conv_w", 2): (None, "tp"),
+    ("conv_b", 1): ("tp",),
+    ("dt_bias", 1): ("tp",),
+    ("A_log", 1): ("tp",),
+    ("D", 1): ("tp",),
+    # cnn
+    ("conv", 4): (None, None, None, "tp"),   # [kh, kw, cin, cout]
+    ("fc", 2): ("fsdp", "tp"),
+}
+
+
+def _mesh_axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for(path, shape, dist: Dist) -> P:
+    """PartitionSpec for one parameter leaf."""
+    name = None
+    for p in reversed(path):
+        key = getattr(p, "key", getattr(p, "name", None))
+        if key is not None:
+            name = str(key)
+            break
+    rule = _RULES.get((name, len(shape)))
+    if rule is None:
+        return P()
+    sizes = _mesh_axis_sizes(dist.mesh)
+    axes = []
+    for dim, logical in zip(shape, rule):
+        if logical == "tp":
+            mesh_ax = dist.model_axis
+        elif logical == "fsdp":
+            mesh_ax = dist.fsdp_axis
+        else:
+            mesh_ax = None
+        if mesh_ax is not None and dim % sizes.get(mesh_ax, 1) != 0:
+            mesh_ax = None                     # indivisible -> replicate
+        axes.append(mesh_ax)
+    while axes and axes[-1] is None:
+        axes.pop()
+    return P(*axes)
+
+
+def _stacked_spec(path, aval, dist: Dist) -> P:
+    """Stacked (scanned) layer params carry a leading L dim -> prepend None."""
+    is_stacked = any(
+        str(getattr(p, "key", getattr(p, "name", ""))).endswith("layers")
+        for p in path
+    )
+    shape = aval.shape
+    if is_stacked and len(shape) >= 1:
+        inner = spec_for(path, shape[1:], dist)
+        return P(None, *inner)
+    return spec_for(path, shape, dist)
+
+
+def param_specs(params_tree, dist: Dist):
+    """Tree of PartitionSpec mirroring a params (or params-shape) tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _stacked_spec(path, leaf, dist), params_tree)
+
+
+def param_shardings(params_tree, dist: Dist):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(dist.mesh, s), param_specs(params_tree, dist))
+
+
+# --- activation constraints -------------------------------------------------------
+
+def shard_act(x, dist: Optional[Dist], *axes):
+    """with_sharding_constraint helper; no-op when dist is None."""
+    if dist is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(dist.mesh, P(*axes)))
+
+
+def batch_spec(dist: Optional[Dist], ndim: int) -> P:
+    if dist is None:
+        return P()
+    return P(dist.dp, *([None] * (ndim - 1)))

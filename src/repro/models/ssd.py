@@ -1,0 +1,190 @@
+"""Mamba2 SSD (state-space duality) blocks.
+
+Chunked SSD algorithm (arXiv:2405.21060 §6): sequence split into chunks of
+length Q; within-chunk outputs are a masked matmul (MXU-friendly — this is the
+"duality"), cross-chunk influence flows through a per-chunk recurrent state
+carried by ``lax.scan``.  Matches ``repro.kernels.ssd_scan`` (Pallas) and is
+its oracle.
+
+Projections are split (z / x / B / C / dt) so the inner channels shard
+head-aligned over the TP axis when divisible (zamba2: 64 heads / 16-way TP;
+mamba2-130m's 24 heads replicate — recorded in the roofline notes).
+
+Decode is the O(1) recurrent update: state <- state*exp(dt*A) + dt*B⊗x.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_mamba_block(key, cfg) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    ng, ds, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    cw = cfg.ssm_conv_width
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_z": L.dense_init(ks[0], (d, di), dt),
+        "in_x": L.dense_init(ks[1], (d, di), dt),
+        "in_b": L.dense_init(ks[2], (d, ng * ds), dt),
+        "in_c": L.dense_init(ks[3], (d, ng * ds), dt),
+        "in_dt": L.dense_init(ks[4], (d, nh), dt),
+        "conv_w": L.dense_init(ks[5], (cw, di), dt, scale=0.2),
+        "conv_b": jnp.zeros((di,), dt),
+        "conv_bc_w": L.dense_init(ks[6], (cw, 2 * ng * ds), dt, scale=0.2),
+        "conv_bc_b": jnp.zeros((2 * ng * ds,), dt),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "gate_norm": L.init_rmsnorm(di),
+        "out_proj": L.dense_init(ks[7], (di, d), dt, scale=0.02 / max(cfg.num_layers, 1) ** 0.5),
+    }
+
+
+def _project_in(p, x):
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    xs = jnp.einsum("bsd,de->bse", x, p["in_x"])
+    bc = jnp.concatenate([jnp.einsum("bsd,de->bse", x, p["in_b"]),
+                          jnp.einsum("bsd,de->bse", x, p["in_c"])], axis=-1)
+    dt_raw = jnp.einsum("bsd,de->bse", x, p["in_dt"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    return z, xs, bc, dt
+
+
+def _causal_conv(xin, w, b):
+    """Depthwise causal conv1d.  xin: [B, S, C]; w: [cw, C]."""
+    cw = w.shape[0]
+    pad = jnp.pad(xin, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xin.shape[1]] * w[i] for i in range(cw))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(x):
+    """Log-space segment sums: out[..., i, j] = sum_{k=j+1..i} x[..., k] (i>=j)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    x: [b, S, nh, hp]; dt: [b, S, nh]; A: [nh] (negative);
+    B, C: [b, S, ng, ds].  Returns y [b, S, nh, hp] (fp32).
+    """
+    b, S, nh, hp = x.shape
+    ng, ds = B.shape[-2], B.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} % chunk {Q} != 0"
+    nc = S // Q
+    rep = nh // ng
+
+    xc = x.reshape(b, nc, Q, nh, hp).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, Q, nh).astype(jnp.float32)
+    Bc = B.reshape(b, nc, Q, ng, ds).astype(jnp.float32)
+    Cc = C.reshape(b, nc, Q, ng, ds).astype(jnp.float32)
+    dA = dtc * A                                         # [b, nc, Q, nh]
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    # --- within-chunk (diagonal block): masked matmul — the "dual" form
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))    # [b, nc, nh, Q, Q]
+    CB = jnp.einsum("bcqgs,bckgs->bcgqk", Cc, Bc)        # [b, nc, ng, Q, Q]
+    CB = jnp.repeat(CB, rep, axis=2)                     # -> per-head
+    xdt = xc * dtc[..., None]
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", CB * Lmat, xdt)
+
+    # --- per-chunk end states: S_c = sum_q (B_q * decay_to_end_q) ⊗ (x*dt)_q
+    decay_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)   # [b, nc, Q, nh]
+    Bh = jnp.repeat(Bc, rep, axis=3)                     # [b, nc, Q, nh, ds]
+    states = jnp.einsum("bcqhs,bcqhp->bchps", Bh * decay_end[..., None], xdt)
+
+    # --- cross-chunk recurrence (lax.scan over chunks)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])           # [b, nc, nh]
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        return carry * dec[..., None, None] + st, carry  # emit PREVIOUS state
+
+    init = jnp.zeros((b, nh, hp, ds), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # [b, nc, nh, hp, ds]
+
+    # --- off-diagonal: prior state flowing into this chunk
+    decay_in = jnp.exp(dA_cum)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    y_off = jnp.einsum("bcqhs,bchps->bcqhp", Ch * decay_in[..., None], prev_states)
+
+    return (y_diag + y_off).reshape(b, S, nh, hp), final_state
+
+
+def mamba_block(p, cfg, x, return_cache: bool = False):
+    """Full-sequence Mamba2 block.  x: [B, S, D]."""
+    di, ng, ds, nh, hp = (cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                          cfg.ssm_nheads, cfg.ssm_headdim)
+    B_, S, _ = x.shape
+    z, xs_raw, bc_raw, dt = _project_in(p, x)
+    xs = _causal_conv(xs_raw, p["conv_w"], p["conv_b"])
+    bc = _causal_conv(bc_raw, p["conv_bc_w"], p["conv_bc_b"])
+    Bm = bc[..., : ng * ds].reshape(B_, S, ng, ds)
+    Cm = bc[..., ng * ds:].reshape(B_, S, ng, ds)
+    A = -jnp.exp(p["A_log"])
+    y, final_state = ssd_chunked(xs.reshape(B_, S, nh, hp), dt, A, Bm, Cm,
+                                 cfg.ssm_chunk)
+    y = y + p["D"][:, None] * xs.reshape(B_, S, nh, hp).astype(jnp.float32)
+    y = y.reshape(B_, S, di).astype(x.dtype)
+    y = L.rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if return_cache:
+        cw = cfg.ssm_conv_width
+        conv_tail = jnp.concatenate([xs_raw, bc_raw], axis=-1)[:, S - (cw - 1):]
+        return out, (conv_tail, final_state)
+    return out
+
+
+def init_ssm_cache(cfg, batch: int, num_layers: int) -> dict:
+    ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((num_layers, batch, cfg.ssm_conv_width - 1, ch),
+                          L.dtype_of(cfg)),
+        "state": jnp.zeros((num_layers, batch, cfg.ssm_nheads, cfg.ssm_headdim,
+                            cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_decode(p, cfg, x, cache) -> tuple:
+    """Single-token recurrent step.  x: [B, 1, D]; cache {"conv","state"} (layer slice)."""
+    di, ng, ds, nh, hp = (cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                          cfg.ssm_nheads, cfg.ssm_headdim)
+    B_, _, D = x.shape
+    z, xs, bc, dt = _project_in(p, x)
+    xbc = jnp.concatenate([xs, bc], axis=-1)              # [B, 1, di+2ngds]
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)  # [B, cw, C]
+    new_conv = hist[:, 1:]
+    w_all = jnp.concatenate([p["conv_w"], p["conv_bc_w"]], axis=1)
+    b_all = jnp.concatenate([p["conv_b"], p["conv_bc_b"]])
+    conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, w_all) + b_all)
+    xv = conv[:, :di].reshape(B_, nh, hp).astype(jnp.float32)
+    Bv = conv[:, di: di + ng * ds].reshape(B_, ng, ds).astype(jnp.float32)
+    Cv = conv[:, di + ng * ds:].reshape(B_, ng, ds).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    dtv = dt[:, 0]                                        # [B, nh]
+    rep = nh // ng
+    Bh = jnp.repeat(Bv, rep, axis=1)
+    Ch = jnp.repeat(Cv, rep, axis=1)
+    decay = jnp.exp(dtv * A)
+    state = cache["state"] * decay[..., None, None] + \
+        jnp.einsum("bhs,bhp->bhps", Bh * dtv[..., None], xv)
+    y = jnp.einsum("bhs,bhps->bhp", Ch, state)
+    y = y + p["D"][:, None] * xv
+    y = y.reshape(B_, 1, di).astype(x.dtype)
+    y = L.rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), \
+        {"conv": new_conv, "state": state}

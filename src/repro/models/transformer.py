@@ -1,0 +1,273 @@
+"""Unified decoder-only transformer LM.
+
+Covers: dense GQA/MQA (qwen2/3, granite, stablelm), MLA+MoE (deepseek v2/v3,
+incl. MTP head), prefix-VLM (paligemma: bidirectional patch-embedding prefix).
+
+Layer stacks are SCANNED (params carry a leading L dim) with a selectable
+remat policy — this keeps HLO size and compile time flat in depth and gives
+XLA a single steady-state loop body to software-pipeline collectives into.
+DeepSeek's leading dense layers form a second, separate scan stack.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models.sharding import shard_act
+
+Params = Dict[str, Any]
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        pol = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=pol)
+
+
+# --- layer init -----------------------------------------------------------------
+
+def init_layer(key, cfg, moe: bool) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": L.init_rmsnorm(cfg.d_model), "ln2": L.init_rmsnorm(cfg.d_model)}
+    if cfg.attn_type == "mla":
+        p["attn"] = MLA.init_mla(k1, cfg)
+    else:
+        p["attn"] = L.init_attention(k1, cfg)
+    p["moe" if moe else "ffn"] = MOE.init_moe(k2, cfg) if moe else L.init_ffn(k2, cfg)
+    return p
+
+
+def _stack(key, cfg, n: int, moe: bool) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_layer(k, cfg, moe))(keys)
+
+
+def init_params(key, cfg) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {"embed": L.init_embed(ks[0], cfg),
+                 "final_norm": L.init_rmsnorm(cfg.d_model)}
+    if cfg.num_experts:
+        n_dense, n_moe = cfg.first_k_dense, cfg.num_layers - cfg.first_k_dense
+        if n_dense:
+            p["dense_layers"] = _stack(ks[1], cfg, n_dense, moe=False)
+        p["moe_layers"] = _stack(ks[2], cfg, n_moe, moe=True)
+    else:
+        p["layers"] = _stack(ks[1], cfg, cfg.num_layers, moe=False)
+    if not cfg.tie_embeddings:
+        p["head"] = {"head_w": L.dense_init(ks[3], (cfg.d_model, cfg.vocab_size),
+                                            L.dtype_of(cfg))}
+    if cfg.mtp_depth:
+        p["mtp"] = {"proj": L.dense_init(ks[4], (2 * cfg.d_model, cfg.d_model),
+                                         L.dtype_of(cfg)),
+                    "layer": init_layer(ks[5], cfg, moe=False),
+                    "norm": L.init_rmsnorm(cfg.d_model)}
+    return p
+
+
+# --- forward (train / prefill) -----------------------------------------------------
+
+def _layer_fwd(lp, cfg, x, positions, prefix_len, dist, *, moe: bool, collect_kv: bool):
+    h = L.norm(lp["ln1"], x, cfg.norm_eps)
+    kv = None
+    if cfg.attn_type == "mla":
+        if collect_kv:
+            a, kv = MLA.mla_prefill(lp["attn"], cfg, h, positions, prefix_len)
+        else:
+            a = MLA.mla_block(lp["attn"], cfg, h, positions, prefix_len)
+    else:
+        if collect_kv:
+            a, kv = L.attention_prefill(lp["attn"], cfg, h, positions, prefix_len)
+        else:
+            a = L.attention_block(lp["attn"], cfg, h, positions, prefix_len)
+    x = x + a
+    h = L.norm(lp["ln2"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if moe:
+        f, aux = MOE.moe_block(lp["moe"], cfg, h, dist)
+    else:
+        f = L.ffn_block(lp["ffn"], cfg, h)
+    x = x + f
+    if dist is not None:
+        x = shard_act(x, dist, dist.dp, None, None)
+    return x, aux, kv
+
+
+def _run_stack(stack_params, cfg, x, positions, prefix_len, dist, *, moe: bool,
+               collect_kv: bool):
+    body = functools.partial(_layer_fwd, cfg=cfg, positions=positions,
+                             prefix_len=prefix_len, dist=dist, moe=moe,
+                             collect_kv=collect_kv)
+
+    def scan_body(carry, lp):
+        x, aux = carry
+        x, aux_l, kv = body(lp, x=x)
+        return (x, aux + aux_l), kv
+
+    scan_body = _remat(scan_body, cfg)
+    (x, aux), kvs = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)),
+                                 stack_params)
+    return x, aux, kvs
+
+
+def forward(params: Params, cfg, tokens, dist=None, prefix_embeds=None,
+            collect_kv: bool = False):
+    """tokens: [B, S_text].  Returns (hidden [B,S,D], logits fp32, aux, kv_caches)."""
+    x = L.embed(params["embed"], tokens)
+    if cfg.family == "vlm":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)   # gemma embedding scale
+    prefix_len = 0
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        prefix_len = prefix_embeds.shape[1]
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    if dist is not None:
+        x = shard_act(x, dist, dist.dp, None, None)
+
+    aux = jnp.zeros((), jnp.float32)
+    kvs = {}
+    if cfg.num_experts:
+        if "dense_layers" in params:
+            x, a0, kv0 = _run_stack(params["dense_layers"], cfg, x, positions,
+                                    prefix_len, dist, moe=False, collect_kv=collect_kv)
+            aux += a0
+            kvs["dense"] = kv0
+        x, a1, kv1 = _run_stack(params["moe_layers"], cfg, x, positions,
+                                prefix_len, dist, moe=True, collect_kv=collect_kv)
+        aux += a1
+        kvs["moe"] = kv1
+    else:
+        x, aux, kv = _run_stack(params["layers"], cfg, x, positions, prefix_len,
+                                dist, moe=False, collect_kv=collect_kv)
+        kvs["layers"] = kv
+    h = L.norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params.get("head"), params["embed"], h)
+    return h, logits, aux, (kvs if collect_kv else None)
+
+
+def loss_fn(params: Params, cfg, tokens, labels, dist=None, prefix_embeds=None):
+    """Mean NLL (+ MTP auxiliary loss for DeepSeek-V3)."""
+    h, logits, aux, _ = forward(params, cfg, tokens, dist, prefix_embeds)
+    if prefix_embeds is not None:
+        logits = logits[:, prefix_embeds.shape[1]:]
+    loss = L.cross_entropy(logits[:, :-1], labels[:, 1:])
+    metrics = {"nll": loss, "moe_aux": aux}
+    if cfg.mtp_depth and "mtp" in params:
+        # MTP: predict token t+2 from (h_t, embed(t+1))
+        emb_next = L.embed(params["embed"], tokens[:, 1:])
+        h_in = jnp.concatenate([h[:, :-1], emb_next], axis=-1)
+        h_mtp = jnp.einsum("bsd,dk->bsk", h_in, params["mtp"]["proj"])
+        pos = jnp.arange(h_mtp.shape[1])[None, :]
+        h_mtp, _, _ = _layer_fwd(params["mtp"]["layer"], cfg, h_mtp, pos, 0, dist,
+                                 moe=False, collect_kv=False)
+        h_mtp = L.norm(params["mtp"]["norm"], h_mtp, cfg.norm_eps)
+        mtp_logits = L.unembed(params.get("head"), params["embed"], h_mtp)
+        mtp_loss = L.cross_entropy(mtp_logits[:, :-1], labels[:, 2:])
+        loss = loss + 0.3 * mtp_loss
+        metrics["mtp_nll"] = mtp_loss
+    if cfg.num_experts and cfg.router_fn == "softmax":
+        loss = loss + 0.001 * aux        # classic load-balance aux loss (V2)
+    return loss, metrics
+
+
+# --- decode ------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int) -> Params:
+    """Per-stack KV caches (+ scalar length)."""
+    cache: Params = {"len": jnp.zeros((), jnp.int32)}
+    if cfg.num_experts:
+        n_dense, n_moe = cfg.first_k_dense, cfg.num_layers - cfg.first_k_dense
+        mk = (MLA.init_mla_cache if cfg.attn_type == "mla" else
+              functools.partial(L.init_kv_cache, max_len=max_len))
+        if cfg.attn_type == "mla":
+            if n_dense:
+                cache["dense"] = MLA.init_mla_cache(cfg, batch, max_len, n_dense)
+            cache["moe"] = MLA.init_mla_cache(cfg, batch, max_len, n_moe)
+        else:
+            if n_dense:
+                cache["dense"] = L.init_kv_cache(cfg, batch, max_len, n_dense)
+            cache["moe"] = L.init_kv_cache(cfg, batch, max_len, n_moe)
+    else:
+        if cfg.attn_type == "mla":
+            cache["layers"] = MLA.init_mla_cache(cfg, batch, max_len, cfg.num_layers)
+        else:
+            cache["layers"] = L.init_kv_cache(cfg, batch, max_len, cfg.num_layers)
+    return cache
+
+
+def _layer_decode(lp, cfg, x, cache_l, cache_len, dist, *, moe: bool):
+    h = L.norm(lp["ln1"], x, cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, new_cache = MLA.mla_decode(lp["attn"], cfg, h, cache_l, cache_len)
+    else:
+        a, new_cache = L.attention_decode(lp["attn"], cfg, h, cache_l, cache_len)
+    x = x + a
+    h = L.norm(lp["ln2"], x, cfg.norm_eps)
+    if moe:
+        f, _ = MOE.moe_block(lp["moe"], cfg, h, dist)
+    else:
+        f = L.ffn_block(lp["ffn"], cfg, h)
+    return x + f, new_cache
+
+
+def _decode_stack(stack_params, cfg, x, cache_stack, cache_len, dist, *, moe: bool):
+    def body(x, inp):
+        lp, cl = inp
+        x, new_c = _layer_decode(lp, cfg, x, cl, cache_len, dist, moe=moe)
+        return x, new_c
+
+    return jax.lax.scan(body, x, (stack_params, cache_stack))
+
+
+def decode_step(params: Params, cfg, tokens, cache, dist=None):
+    """One-token decode.  tokens: [B, 1].  Returns (logits, new_cache)."""
+    x = L.embed(params["embed"], tokens)
+    if cfg.family == "vlm":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    cache_len = cache["len"]
+    new_cache: Params = {"len": cache_len + 1}
+    if cfg.num_experts:
+        if "dense" in cache:
+            x, nc = _decode_stack(params["dense_layers"], cfg, x, cache["dense"],
+                                  cache_len, dist, moe=False)
+            new_cache["dense"] = nc
+        x, nc = _decode_stack(params["moe_layers"], cfg, x, cache["moe"],
+                              cache_len, dist, moe=True)
+        new_cache["moe"] = nc
+    else:
+        x, nc = _decode_stack(params["layers"], cfg, x, cache["layers"],
+                              cache_len, dist, moe=False)
+        new_cache["layers"] = nc
+    h = L.norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params.get("head"), params["embed"], h)
+    return logits, new_cache
+
+
+def prefill(params: Params, cfg, tokens, dist=None, prefix_embeds=None):
+    """Prefill: logits + populated cache (cache max_len = prompt length)."""
+    _, logits, _, kvs = forward(params, cfg, tokens, dist, prefix_embeds,
+                                collect_kv=True)
+    S = tokens.shape[1] + (prefix_embeds.shape[1] if prefix_embeds is not None else 0)
+    cache: Params = {"len": jnp.asarray(S, jnp.int32)}
+    for name, kv in kvs.items():
+        key = {"layers": "layers", "dense": "dense", "moe": "moe"}[name]
+        if kv is None:
+            continue
+        if cfg.attn_type == "mla":
+            c_kv, k_rope = kv
+            cache[key] = {"c_kv": c_kv, "k_rope": k_rope}
+        else:
+            k, v = kv
+            cache[key] = {"k": k, "v": v}
+    return logits, cache

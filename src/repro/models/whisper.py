@@ -1,0 +1,148 @@
+"""Whisper-small encoder-decoder backbone.
+
+The conv/log-mel frontend is a STUB per the assignment: inputs are precomputed
+frame embeddings [B, num_frames, D].  Encoder: bidirectional pre-LN blocks.
+Decoder: causal self-attention + cross-attention over encoder output.
+LayerNorm (with bias) + plain GELU MLP + learned positions, per the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.sharding import shard_act
+from repro.models.transformer import _remat
+
+Params = dict
+
+
+def init_params(key, cfg, max_seq: int = 4096) -> Params:
+    ks = jax.random.split(key, 8)
+    dt = L.dtype_of(cfg)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": L.init_layernorm(cfg.d_model),
+                "attn": L.init_attention(k1, cfg),
+                "ln2": L.init_layernorm(cfg.d_model),
+                "ffn": L.init_ffn(k2, cfg)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": L.init_layernorm(cfg.d_model),
+                "self_attn": L.init_attention(k1, cfg),
+                "ln2": L.init_layernorm(cfg.d_model),
+                "cross_attn": L.init_attention(k2, cfg),
+                "ln3": L.init_layernorm(cfg.d_model),
+                "ffn": L.init_ffn(k3, cfg)}
+
+    return {
+        "embed": L.init_embed(ks[0], cfg),
+        "enc_pos": {"pos_w": L.dense_init(ks[1], (cfg.num_frames, cfg.d_model), dt)},
+        "dec_pos": {"pos_w": L.dense_init(ks[2], (max_seq, cfg.d_model), dt)},
+        "enc_layers": jax.vmap(enc_layer)(jax.random.split(ks[3], cfg.encoder_layers)),
+        "dec_layers": jax.vmap(dec_layer)(jax.random.split(ks[4], cfg.num_layers)),
+        "enc_norm": L.init_layernorm(cfg.d_model),
+        "dec_norm": L.init_layernorm(cfg.d_model),
+    }
+
+
+def encode(params: Params, cfg, frames, dist=None):
+    """frames: [B, num_frames, D] (stubbed frontend output)."""
+    x = frames.astype(L.dtype_of(cfg)) + params["enc_pos"]["pos_w"][None]
+    if dist is not None:
+        x = shard_act(x, dist, dist.dp, None, None)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, lp):
+        h = L.norm(lp["ln1"], x, cfg.norm_eps)
+        x = x + L.attention_encode(lp["attn"], cfg, h, positions)
+        x = x + L.ffn_block(lp["ffn"], cfg, L.norm(lp["ln2"], x, cfg.norm_eps))
+        return x, None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["enc_layers"])
+    return L.norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_layer_fwd(lp, cfg, x, positions, enc_out, collect_kv=False):
+    h = L.norm(lp["ln1"], x, cfg.norm_eps)
+    kv = None
+    if collect_kv:
+        a, kv = L.attention_prefill(lp["self_attn"], cfg, h, positions)
+    else:
+        a = L.attention_block(lp["self_attn"], cfg, h, positions)
+    x = x + a
+    h = L.norm(lp["ln2"], x, cfg.norm_eps)
+    ck = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wk"])
+    cv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wv"])
+    x = x + L.attention_block(lp["cross_attn"], cfg, h, positions, kv_override=(ck, cv))
+    x = x + L.ffn_block(lp["ffn"], cfg, L.norm(lp["ln3"], x, cfg.norm_eps))
+    if collect_kv:
+        return x, (kv, (ck, cv))
+    return x, None
+
+
+def forward(params: Params, cfg, tokens, frames, dist=None, collect_kv=False):
+    enc_out = encode(params, cfg, frames, dist)
+    x = L.embed(params["embed"], tokens) + params["dec_pos"]["pos_w"][None, : tokens.shape[1]]
+    if dist is not None:
+        x = shard_act(x, dist, dist.dp, None, None)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def body(x, lp):
+        out = _dec_layer_fwd(lp, cfg, x, positions, enc_out, collect_kv)
+        if collect_kv:
+            return out
+        x, _ = out
+        return x, None
+
+    x, kvs = jax.lax.scan(_remat(body, cfg), x, params["dec_layers"])
+    h = L.norm(params["dec_norm"], x, cfg.norm_eps)
+    logits = L.unembed(None, params["embed"], h)          # whisper ties embeddings
+    return h, logits, kvs
+
+
+def loss_fn(params: Params, cfg, tokens, labels, frames, dist=None):
+    _, logits, _ = forward(params, cfg, tokens, frames, dist)
+    loss = L.cross_entropy(logits[:, :-1], labels[:, 1:])
+    return loss, {"nll": loss}
+
+
+def init_cache(cfg, batch: int, max_len: int) -> Params:
+    dt = L.dtype_of(cfg)
+    kv, hd, nl = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    return {
+        "len": jnp.zeros((), jnp.int32),
+        "self": {"k": jnp.zeros((nl, batch, max_len, kv, hd), dt),
+                 "v": jnp.zeros((nl, batch, max_len, kv, hd), dt)},
+        # cross K/V precomputed at prefill
+        "cross": {"k": jnp.zeros((nl, batch, cfg.num_frames, kv, hd), dt),
+                  "v": jnp.zeros((nl, batch, cfg.num_frames, kv, hd), dt)},
+    }
+
+
+def decode_step(params: Params, cfg, tokens, cache, dist=None):
+    cache_len = cache["len"]
+    x = L.embed(params["embed"], tokens) + \
+        jax.lax.dynamic_slice_in_dim(params["dec_pos"]["pos_w"], cache_len, 1, 0)[None]
+
+    def body(x, inp):
+        lp, self_c, ck, cv = inp
+        h = L.norm(lp["ln1"], x, cfg.norm_eps)
+        a, new_c = L.attention_decode(lp["self_attn"], cfg, h, self_c, cache_len)
+        x = x + a
+        h = L.norm(lp["ln2"], x, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"])
+        o = L.decode_attention(q, ck, cv, ck.shape[1], scale=cfg.head_dim ** -0.5)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["cross_attn"]["wo"])
+        x = x + L.ffn_block(lp["ffn"], cfg, L.norm(lp["ln3"], x, cfg.norm_eps))
+        return x, new_c
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["self"],
+                  cache["cross"]["k"], cache["cross"]["v"]))
+    h = L.norm(params["dec_norm"], x, cfg.norm_eps)
+    logits = L.unembed(None, params["embed"], h)
+    return logits, {"len": cache_len + 1, "self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,164 @@
+"""Zamba2 hybrid: Mamba2 backbone + one SHARED attention block.
+
+38 SSM layers; after every ``attn_every`` (6) of them the single shared
+attention+MLP block runs (tied weights at every call site, per-site KV cache).
+The SSM path keeps long-context decode O(1); the shared block's decode
+attention is O(context) per step — sub-quadratic overall, so `long_500k` runs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssd
+from repro.models.sharding import shard_act
+from repro.models.transformer import _remat
+
+Params = dict
+
+
+def _n_sites(cfg) -> int:
+    return cfg.num_layers // cfg.attn_every
+
+
+def init_params(key, cfg) -> Params:
+    ks = jax.random.split(key, 4)
+
+    def one(k):
+        return {"ln": L.init_rmsnorm(cfg.d_model), "mix": ssd.init_mamba_block(k, cfg)}
+
+    shared_key1, shared_key2 = jax.random.split(ks[2])
+    p = {
+        "embed": L.init_embed(ks[0], cfg),
+        "mamba_layers": jax.vmap(one)(jax.random.split(ks[1], cfg.num_layers)),
+        "shared_attn": {
+            "ln1": L.init_rmsnorm(cfg.d_model),
+            "attn": L.init_attention(shared_key1, cfg),
+            "ln2": L.init_rmsnorm(cfg.d_model),
+            "ffn": L.init_ffn(shared_key2, cfg),
+        },
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = {"head_w": L.dense_init(ks[3], (cfg.d_model, cfg.vocab_size),
+                                            L.dtype_of(cfg))}
+    return p
+
+
+def _segments(cfg):
+    """Static (start, stop) layer ranges; shared block runs after each full one."""
+    e = cfg.attn_every
+    return [(i * e, min((i + 1) * e, cfg.num_layers))
+            for i in range(-(-cfg.num_layers // e))]
+
+
+def _shared_fwd(sp, cfg, x, positions, collect_kv=False):
+    h = L.norm(sp["ln1"], x, cfg.norm_eps)
+    if collect_kv:
+        a, kv = L.attention_prefill(sp["attn"], cfg, h, positions)
+    else:
+        a, kv = L.attention_block(sp["attn"], cfg, h, positions), None
+    x = x + a
+    x = x + L.ffn_block(sp["ffn"], cfg, L.norm(sp["ln2"], x, cfg.norm_eps))
+    return x, kv
+
+
+def forward(params: Params, cfg, tokens, dist=None, collect_cache=False):
+    x = L.embed(params["embed"], tokens)
+    if dist is not None:
+        x = shard_act(x, dist, dist.dp, None, None)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def body(x, lp):
+        out = ssd.mamba_block(lp["mix"], cfg, L.norm(lp["ln"], x, cfg.norm_eps),
+                              return_cache=collect_cache)
+        dx, c = out if collect_cache else (out, None)
+        return x + dx, c
+
+    body = _remat(body, cfg)
+    ssm_caches, kv_caches = [], []
+    for (lo, hi) in _segments(cfg):
+        seg = jax.tree_util.tree_map(lambda a: a[lo:hi], params["mamba_layers"])
+        x, c = jax.lax.scan(body, x, seg)
+        if collect_cache:
+            ssm_caches.append(c)
+        if hi - lo == cfg.attn_every:         # full segment -> shared block
+            x, kv = _shared_fwd(params["shared_attn"], cfg, x, positions,
+                                collect_kv=collect_cache)
+            if collect_cache:
+                kv_caches.append(kv)
+    h = L.norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params.get("head"), params["embed"], h)
+    caches = None
+    if collect_cache:
+        ssm = jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs), *ssm_caches)
+        kvs = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *kv_caches)
+        caches = (ssm, kvs)
+    return h, logits, caches
+
+
+def loss_fn(params: Params, cfg, tokens, labels, dist=None):
+    _, logits, _ = forward(params, cfg, tokens, dist)
+    loss = L.cross_entropy(logits[:, :-1], labels[:, 1:])
+    return loss, {"nll": loss}
+
+
+def init_cache(cfg, batch: int, max_len: int) -> Params:
+    n = _n_sites(cfg)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "len": jnp.zeros((), jnp.int32),
+        "ssm": ssd.init_ssm_cache(cfg, batch, cfg.num_layers),
+        "attn": {"k": jnp.zeros((n, batch, max_len, kv, hd), L.dtype_of(cfg)),
+                 "v": jnp.zeros((n, batch, max_len, kv, hd), L.dtype_of(cfg))},
+    }
+
+
+def decode_step(params: Params, cfg, tokens, cache, dist=None):
+    x = L.embed(params["embed"], tokens)
+    cache_len = cache["len"]
+
+    def body(x, inp):
+        lp, cl = inp
+        dx, nc = ssd.mamba_decode(lp["mix"], cfg, L.norm(lp["ln"], x, cfg.norm_eps), cl)
+        return x + dx, nc
+
+    new_ssm, new_k, new_v = [], [], []
+    site = 0
+    for (lo, hi) in _segments(cfg):
+        seg = jax.tree_util.tree_map(lambda a: a[lo:hi], params["mamba_layers"])
+        seg_cache = jax.tree_util.tree_map(lambda a: a[lo:hi], cache["ssm"])
+        x, nc = jax.lax.scan(body, x, (seg, seg_cache))
+        new_ssm.append(nc)
+        if hi - lo == cfg.attn_every:
+            sp = params["shared_attn"]
+            h = L.norm(sp["ln1"], x, cfg.norm_eps)
+            site_cache = {"k": cache["attn"]["k"][site], "v": cache["attn"]["v"][site]}
+            a, nkv = L.attention_decode(sp["attn"], cfg, h, site_cache, cache_len)
+            x = x + a
+            x = x + L.ffn_block(sp["ffn"], cfg, L.norm(sp["ln2"], x, cfg.norm_eps))
+            new_k.append(nkv["k"])
+            new_v.append(nkv["v"])
+            site += 1
+    h = L.norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params.get("head"), params["embed"], h)
+    new_cache = {
+        "len": cache_len + 1,
+        "ssm": jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs), *new_ssm),
+        "attn": {"k": jnp.stack(new_k), "v": jnp.stack(new_v)},
+    }
+    return logits, new_cache
+
+
+def prefill(params: Params, cfg, tokens, dist=None):
+    _, logits, caches = forward(params, cfg, tokens, dist, collect_cache=True)
+    ssm, kvs = caches
+    conv_tail, final_state = ssm
+    k, v = kvs
+    return logits, {
+        "len": jnp.asarray(tokens.shape[1], jnp.int32),
+        "ssm": {"conv": conv_tail, "state": final_state},
+        "attn": {"k": k, "v": v},
+    }

@@ -1,0 +1,42 @@
+"""Optimizer registry with a uniform (init / apply / specs) interface."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.optim import adafactor as _af
+from repro.optim import adamw as _aw
+from repro.optim.adamw import (AdamWConfig, OptState, global_norm,  # noqa: F401
+                               quantize_i8, dequantize_i8, warmup_cosine)
+from repro.optim.adafactor import (AdafactorConfig, AdafactorState,  # noqa: F401
+                                   FactoredV)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable          # params -> state
+    apply: Callable         # (params, grads, state) -> (params, state, metrics)
+    specs: Callable         # (param_spec_tree, params_shape) -> state spec tree
+
+
+def make_optimizer(name: str, lr: float = 3e-4, total_steps: int = 10000) -> Optimizer:
+    if name == "adafactor":
+        cfg = _af.make_adafactor(lr, total_steps)
+        return Optimizer(
+            name=name,
+            init=lambda p: _af.init_state(p, cfg),
+            apply=lambda p, g, s: _af.apply_adafactor(p, g, s, cfg),
+            specs=lambda ps, shp: _af.state_specs(ps, shp, cfg))
+    cfg = _aw.make_optimizer(name, lr, total_steps)
+
+    def specs(ps, shp):
+        from jax.sharding import PartitionSpec as P
+        return _aw.OptState(step=P(), m=ps, v=ps)
+
+    return Optimizer(
+        name=name,
+        init=lambda p: _aw.init_opt_state(p, cfg),
+        apply=lambda p, g, s: _aw.apply_adamw(p, g, s, cfg),
+        specs=specs)

@@ -1,0 +1,127 @@
+"""Adafactor with momentum — the canonical TPU-scale optimizer (T5-style).
+
+The second moment of any >=2-D parameter with both trailing dims >= 128 is
+FACTORED into row/column statistics (r: mean over the last dim, c: mean over
+the second-to-last), cutting v from O(d_in*d_out) to O(d_in + d_out).  With a
+bf16 first moment this brings 671B-scale optimizer state to ~4.1 bytes/param
+— the difference between fitting and not fitting a 16 GB/chip single pod
+(EXPERIMENTS.md §Dry-run).
+
+Factored leaves shard exactly like their parameter minus the reduced dim —
+``factored_spec`` derives the PartitionSpec tree used by the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.adamw import global_norm, warmup_cosine
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9                  # momentum (bf16)
+    decay: float = 0.99              # running second-moment decay (paper: 1-t^-0.8)
+    eps: float = 1e-30
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    min_dim_factor: int = 128
+    moment_dtype: str = "bfloat16"
+
+
+class FactoredV(NamedTuple):
+    r: Any   # [..., d_in]  (mean over last dim)
+    c: Any   # [..., d_out] (mean over second-to-last dim)
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any   # per-leaf: FactoredV or full array
+
+
+def _factorable(shape, cfg: AdafactorConfig) -> bool:
+    return (len(shape) >= 2 and shape[-1] >= cfg.min_dim_factor
+            and shape[-2] >= cfg.min_dim_factor)
+
+
+def init_state(params, cfg: AdafactorConfig) -> AdafactorState:
+    def mk_v(p):
+        if _factorable(p.shape, cfg):
+            return FactoredV(r=jnp.zeros(p.shape[:-1], jnp.float32),
+                             c=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+        return jnp.zeros(p.shape, jnp.float32)
+
+    mk_m = lambda p: jnp.zeros(p.shape, jnp.dtype(cfg.moment_dtype))
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree_util.tree_map(mk_m, params),
+                          v=jax.tree_util.tree_map(mk_v, params))
+
+
+def factored_spec(param_spec: P, shape, cfg: AdafactorConfig):
+    """PartitionSpecs for the v leaf derived from the param's spec."""
+    if not _factorable(shape, cfg):
+        return param_spec
+    axes = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    return FactoredV(r=P(*axes[:-1]), c=P(*(axes[:-2] + [axes[-1]])))
+
+
+def state_specs(param_specs_tree, params_shape, cfg: AdafactorConfig):
+    v_specs = jax.tree_util.tree_map(
+        lambda spec, s: factored_spec(spec, s.shape, cfg),
+        param_specs_tree, params_shape,
+        is_leaf=lambda x: isinstance(x, P))
+    return AdafactorState(step=P(), m=param_specs_tree, v=v_specs)
+
+
+def apply_adafactor(params, grads, state: AdafactorState, cfg: AdafactorConfig):
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = cfg.lr(step) if callable(cfg.lr) else cfg.lr
+    d = cfg.decay
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        g2 = g * g + cfg.eps
+        if isinstance(v, FactoredV):
+            r = d * v.r + (1 - d) * jnp.mean(g2, axis=-1)
+            c = d * v.c + (1 - d) * jnp.mean(g2, axis=-2)
+            # rank-1 reconstruction: v_ij ~ r_i * c_j / mean(r)
+            denom = jnp.maximum(jnp.mean(r, axis=-1, keepdims=True), cfg.eps)
+            vhat = (r[..., :, None] * c[..., None, :]) / denom[..., None]
+            new_v = FactoredV(r=r, c=c)
+        else:
+            vhat = d * v + (1 - d) * g2
+            new_v = vhat
+        u = g / jnp.sqrt(vhat + cfg.eps)
+        # Adafactor update clipping (RMS(u) <= 1)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u)
+        m_f = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * u
+        new_p = (p.astype(jnp.float32)
+                 - lr * (m_f + cfg.weight_decay * p.astype(jnp.float32)))
+        return new_p.astype(p.dtype), m_f.astype(m.dtype), new_v
+
+    is_v_leaf = lambda x: isinstance(x, FactoredV)
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_p, AdafactorState(step, new_m, new_v), metrics
+
+
+def make_adafactor(lr=3e-4, total_steps: int = 10000) -> AdafactorConfig:
+    return AdafactorConfig(lr=warmup_cosine(lr, min(500, total_steps // 10 + 1),
+                                            total_steps))

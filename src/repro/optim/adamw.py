@@ -1,0 +1,145 @@
+"""AdamW with optional int8 block-quantized moments, schedules, clipping.
+
+``adamw8bit`` stores both Adam moments as int8 with per-block fp32 scales
+(block = last-dim rows of 256), cutting optimizer state from 8 to ~2.06
+bytes/param — what lets 671B-scale training state fit 16 GB/chip meshes.
+Quantization is error-compensated by re-quantizing AFTER the moment update
+(the standard bitsandbytes-style scheme, dynamic per block).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+# --- int8 block quantization -------------------------------------------------------
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    return jnp.pad(x.reshape(-1), (0, pad)), n
+
+
+def quantize_i8(x: jnp.ndarray):
+    flat, n = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32),
+            "shape": x.shape, "n": n}
+
+
+def dequantize_i8(qs) -> jnp.ndarray:
+    flat = (qs["q"].astype(jnp.float32) * qs["scale"]).reshape(-1)
+    return flat[: qs["n"]].reshape(qs["shape"])
+
+
+# --- schedules -----------------------------------------------------------------------
+
+def warmup_cosine(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+# --- AdamW -----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantize_moments: bool = False      # int8 block-quantized (single-host scale)
+    moment_dtype: str = "float32"       # "bfloat16" halves optimizer state and
+                                        # shards EXACTLY like the param (671B fit)
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def _zeros_like_moment(p, cfg: AdamWConfig):
+    z = jnp.zeros(p.shape, jnp.dtype(cfg.moment_dtype))
+    return quantize_i8(z) if cfg.quantize_moments else z
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> OptState:
+    mk = lambda p: _zeros_like_moment(p, cfg)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree_util.tree_map(mk, params),
+                    v=jax.tree_util.tree_map(mk, params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree_util.tree_leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def _is_moment_leaf(x):
+    return isinstance(x, dict) and set(x) == {"q", "scale", "shape", "n"}
+
+
+def apply_adamw(params, grads, state: OptState, cfg: AdamWConfig):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = cfg.lr(step) if callable(cfg.lr) else cfg.lr
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        if cfg.quantize_moments:
+            m_f = dequantize_i8(m)
+            v_f = jnp.square(dequantize_i8(v))   # v stored in sqrt domain:
+        else:                                    # halves its dynamic range
+            m_f = m.astype(jnp.float32)
+            v_f = v.astype(jnp.float32)
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        upd_ = (m_f / b1c) / (jnp.sqrt(v_f / b2c) + cfg.eps)
+        new_p = p.astype(jnp.float32) - lr * (upd_ + cfg.weight_decay * p.astype(jnp.float32))
+        if cfg.quantize_moments:
+            m_f, v_f = quantize_i8(m_f), quantize_i8(jnp.sqrt(v_f))
+        else:
+            m_f = m_f.astype(m.dtype)
+            v_f = v_f.astype(v.dtype)
+        return new_p.astype(p.dtype), m_f, v_f
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_p, OptState(step, new_m, new_v), metrics
+
+
+def make_optimizer(name: str, lr=3e-4, total_steps: int = 10000) -> AdamWConfig:
+    sched = warmup_cosine(lr, warmup=min(500, total_steps // 10 + 1), total=total_steps)
+    if name == "adamw8bit":
+        return AdamWConfig(lr=sched, quantize_moments=True)
+    if name in ("adamw_bf16", "adamw_lowmem"):
+        return AdamWConfig(lr=sched, moment_dtype="bfloat16")
+    return AdamWConfig(lr=sched)

@@ -1,0 +1,117 @@
+"""Fault-tolerance runtime: heartbeats, straggler detection, preemption.
+
+Mechanisms (all host-side, unit-testable, wired into launch/train.py):
+
+  * HeartbeatMonitor — per-host liveness registry with timeout-based failure
+    flags; at real scale this fronts the coordination service, here it is the
+    same logic over an in-process clock.
+  * StragglerDetector — rolling per-step wall-times; a step slower than
+    median + k*MAD marks the step (and offending host telemetry) straggling.
+    Policy hook decides: log, rebalance, or checkpoint-and-restart.
+  * PreemptionHandler — SIGTERM/SIGINT -> checkpoint-now-then-exit flag
+    (maintenance-event behaviour on TPU pods).
+  * recoverable_step — retries a step through jax transient errors after
+    device reset, the restart half of checkpoint/restart.
+"""
+
+from __future__ import annotations
+
+import collections
+import signal
+import statistics
+import time
+from typing import Callable, Dict, List, Optional
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: List[str], timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout_s = timeout_s
+        self.clock = clock
+        self.last_seen: Dict[str, float] = {h: clock() for h in hosts}
+
+    def beat(self, host: str):
+        self.last_seen[host] = self.clock()
+
+    def dead_hosts(self) -> List[str]:
+        now = self.clock()
+        return [h for h, t in self.last_seen.items() if now - t > self.timeout_s]
+
+    def healthy(self) -> bool:
+        return not self.dead_hosts()
+
+
+class StragglerDetector:
+    """Median + k*MAD outlier rule over a rolling window of step times."""
+
+    def __init__(self, window: int = 50, k: float = 5.0, min_samples: int = 8):
+        self.times = collections.deque(maxlen=window)
+        self.k = k
+        self.min_samples = min_samples
+        self.flagged = 0
+
+    def observe(self, step_time_s: float) -> bool:
+        is_straggler = False
+        if len(self.times) >= self.min_samples:
+            med = statistics.median(self.times)
+            mad = statistics.median(abs(t - med) for t in self.times) or 1e-6
+            if step_time_s > med + self.k * mad:
+                is_straggler = True
+                self.flagged += 1
+        self.times.append(step_time_s)
+        return is_straggler
+
+    def summary(self) -> Dict:
+        if not self.times:
+            return {"median_s": 0.0, "flagged": self.flagged}
+        return {"median_s": statistics.median(self.times), "flagged": self.flagged}
+
+
+class PreemptionHandler:
+    """SIGTERM/SIGINT -> graceful checkpoint-then-exit."""
+
+    def __init__(self, install: bool = True):
+        self.requested = False
+        if install:
+            try:
+                signal.signal(signal.SIGTERM, self._handler)
+                signal.signal(signal.SIGINT, self._handler)
+            except ValueError:
+                pass  # non-main thread (tests)
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+
+def recoverable_step(step_fn: Callable, state, batch, max_retries: int = 2,
+                     on_failure: Optional[Callable] = None):
+    """Run step_fn, retrying through transient runtime failures.
+
+    On each failure: clear jax caches (device reset stand-in) and call
+    ``on_failure(attempt, exc)`` — the hook that restores from checkpoint at
+    real scale.  Programming errors (TypeError, etc.) are NOT retried.
+    """
+    attempt = 0
+    while True:
+        try:
+            return step_fn(state, batch)
+        except (RuntimeError, jax_transient_errors()) as e:  # noqa: B030
+            attempt += 1
+            if attempt > max_retries:
+                raise
+            if on_failure is not None:
+                on_failure(attempt, e)
+            jax_clear_backends()
+
+
+def jax_transient_errors():
+    import jax
+    return getattr(jax.errors, "JaxRuntimeError", RuntimeError)
+
+
+def jax_clear_backends():
+    import jax
+    try:
+        jax.clear_caches()
+    except Exception:
+        pass

@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches see ONE device; multi-device behaviour is tested in
+# subprocesses that set XLA_FLAGS themselves (see test_distributed.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

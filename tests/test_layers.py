@@ -1,0 +1,171 @@
+"""Layer-level unit tests: chunked flash vs naive, MLA absorbed decode,
+SSD chunked vs sequential, MoE dense-vs-EP (singleton mesh), rope properties."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.kernels import ref
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssd
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+# --- chunked flash attention --------------------------------------------------------
+
+@pytest.mark.parametrize("S,chunk", [(64, 64), (256, 64), (96, 64), (200, 64)])
+def test_chunked_flash_vs_naive(S, chunk):
+    B, H, hd = 2, 4, 32
+    q, k, v = (_rand((B, S, H, hd)) for _ in range(3))
+    o = L.flash_attention(q, k, v, scale=hd ** -0.5, chunk=chunk)
+    o_ref = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5)
+
+
+def test_prefix_lm_mask():
+    """With a bidirectional prefix, prefix tokens see each other."""
+    B, S, H, hd, P = 1, 64, 2, 16, 8
+    q, k, v = (_rand((B, S, H, hd)) for _ in range(3))
+    o_pref = L.flash_attention(q, k, v, scale=hd ** -0.5, prefix_len=P, chunk=32)
+    o_causal = L.flash_attention(q, k, v, scale=hd ** -0.5, chunk=32)
+    # rows inside the prefix differ (they can attend forward within the prefix)
+    assert not np.allclose(np.asarray(o_pref[:, :P]), np.asarray(o_causal[:, :P]))
+    # rows after the prefix are unchanged (they already saw the whole prefix)
+    np.testing.assert_allclose(np.asarray(o_pref[:, P:]),
+                               np.asarray(o_causal[:, P:]), atol=2e-5)
+
+
+def test_gqa_grouping_matches_repeat():
+    B, S, H, KV, hd = 2, 128, 8, 2, 16
+    q = _rand((B, S, H, hd))
+    k, v = _rand((B, S, KV, hd)), _rand((B, S, KV, hd))
+    o = L.flash_attention(q, k, v, scale=hd ** -0.5, chunk=64)
+    kk, vv = jnp.repeat(k, H // KV, 2), jnp.repeat(v, H // KV, 2)
+    o_ref = ref.attention_ref(q, kk, vv)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5)
+
+
+# --- rope ---------------------------------------------------------------------------
+
+def test_rope_preserves_norm_and_relative_angles():
+    B, S, H, hd = 1, 16, 1, 32
+    x = _rand((B, S, H, hd))
+    pos = jnp.arange(S)
+    y = L.apply_rope(x, pos, theta=10000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = _rand((1, 1, 1, hd))
+    k = _rand((1, 1, 1, hd))
+    def dot_at(p, d):
+        qr = L.apply_rope(q, jnp.asarray([p]), 10000.0)
+        kr = L.apply_rope(k, jnp.asarray([p + d]), 10000.0)
+        return float(jnp.sum(qr * kr))
+    assert abs(dot_at(3, 5) - dot_at(11, 5)) < 1e-3
+
+
+# --- MLA ----------------------------------------------------------------------------
+
+def test_mla_absorbed_decode_matches_prefill():
+    cfg = get_config("deepseek_v2_236b").reduced()
+    key = jax.random.PRNGKey(0)
+    p = MLA.init_mla(key, cfg)
+    B, S = 2, 12
+    x = _rand((B, S, cfg.d_model), jnp.float32, 0.1).astype(jnp.bfloat16)
+    positions = jnp.arange(S)[None, :]
+    out_full = MLA.mla_block(p, cfg, x, positions)
+
+    cache = MLA.init_mla_cache(cfg, B, S, 1)
+    cache_l = {"c_kv": cache["c_kv"][0], "k_rope": cache["k_rope"][0]}
+    outs = []
+    for i in range(S):
+        o, cache_l = MLA.mla_decode(p, cfg, x[:, i: i + 1], cache_l, i)
+        outs.append(o)
+    out_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_dec, np.float32),
+                               np.asarray(out_full, np.float32),
+                               atol=0.08, rtol=0.08)
+
+
+def test_mla_cache_is_compressed():
+    cfg = get_config("deepseek_v3_671b")      # FULL config arithmetic
+    cache = MLA.init_mla_cache(cfg, batch=1, max_len=4, num_layers=1)
+    per_tok = (cache["c_kv"].shape[-1] + cache["k_rope"].shape[-1])
+    full = cfg.num_heads * (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+                            + cfg.v_head_dim)
+    assert per_tok * 50 < full, "V3 latent cache is ~71x smaller than full KV"
+
+
+# --- SSD ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,chunk", [(64, 16), (128, 32), (64, 64)])
+def test_ssd_chunked_matches_sequential(S, chunk):
+    b, nh, hp, ds = 2, 2, 8, 16
+    x = _rand((b, S, nh, hp))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.3, (b, S, nh)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.3, 1.5, nh), jnp.float32)
+    B = _rand((b, S, 1, ds))
+    C = _rand((b, S, 1, ds))
+    y, final_state = ssd.ssd_chunked(x, dt, A, B, C, chunk)
+    y_ref = ref.ssd_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_mamba_prefill_state_matches_decode_replay():
+    """Final state from the chunked prefill == state after stepwise decode."""
+    cfg = get_config("mamba2_130m").reduced()
+    p = ssd.init_mamba_block(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 32
+    x = _rand((B, S, cfg.d_model), jnp.float32, 0.1).astype(jnp.bfloat16)
+    y_full, (conv_tail, final_state) = ssd.mamba_block(p, cfg, x, return_cache=True)
+
+    cache = {"conv": jnp.zeros((B, cfg.ssm_conv_width - 1,
+                                cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state),
+                               jnp.bfloat16),
+             "state": jnp.zeros((B, cfg.ssm_nheads, cfg.ssm_headdim,
+                                 cfg.ssm_state), jnp.float32)}
+    ys = []
+    for i in range(S):
+        y_i, cache = ssd.mamba_decode(p, cfg, x[:, i: i + 1], cache)
+        ys.append(y_i)
+    y_dec = jnp.concatenate(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_dec, np.float32),
+                               np.asarray(y_full, np.float32), atol=0.05, rtol=0.05)
+    np.testing.assert_allclose(np.asarray(cache["state"]),
+                               np.asarray(final_state), atol=2e-2, rtol=2e-2)
+
+
+# --- MoE ----------------------------------------------------------------------------
+
+def test_moe_routing_weights_normalized():
+    cfg = get_config("deepseek_v3_671b").reduced()
+    p = MOE.init_moe(jax.random.PRNGKey(0), cfg)
+    xf = _rand((32, cfg.d_model))
+    idx, w, aux = MOE._route(p, cfg, xf)
+    assert idx.shape == (32, cfg.experts_per_token)
+    np.testing.assert_allclose(np.asarray(jnp.sum(w, -1)), 1.0, atol=1e-5)
+    assert float(aux) > 0
+
+
+def test_moe_dense_shared_expert_contributes():
+    cfg = get_config("deepseek_v2_236b").reduced()
+    p = MOE.init_moe(jax.random.PRNGKey(1), cfg)
+    x = _rand((2, 8, cfg.d_model), jnp.float32, 0.1).astype(jnp.bfloat16)
+    y, aux = MOE.moe_dense(p, cfg, x)
+    assert y.shape == x.shape
+    p2 = dict(p)
+    p2["shared"] = jax.tree_util.tree_map(jnp.zeros_like, p["shared"])
+    y2, _ = MOE.moe_dense(p2, cfg, x)
+    assert not np.allclose(np.asarray(y, np.float32), np.asarray(y2, np.float32))

@@ -1,0 +1,83 @@
+"""Optimizer + compression tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.optim import compression
+from repro.optim.adamw import quantize_i8, dequantize_i8
+
+
+def _quadratic_losses(opt_name, steps=60):
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(16, 16)), jnp.float32)
+    params = {"w": jnp.zeros((16, 16), jnp.float32)}
+    opt = optim.make_optimizer(opt_name, lr=0.05, total_steps=steps)
+    state = opt.init(params)
+    losses = []
+    for _ in range(steps):
+        loss, grads = jax.value_and_grad(
+            lambda p: jnp.mean((p["w"] - target) ** 2))(params)
+        params, state, _ = opt.apply(params, grads, state)
+        losses.append(float(loss))
+    return losses
+
+
+@pytest.mark.parametrize("name", ["adamw", "adamw_bf16", "adamw8bit", "adafactor"])
+def test_optimizers_descend_quadratic(name):
+    losses = _quadratic_losses(name)
+    # int8-quantized moments add noise: looser bound, still clearly descending
+    bound = 0.40 if name == "adamw8bit" else 0.15
+    assert losses[-1] < losses[0] * bound, f"{name}: {losses[0]} -> {losses[-1]}"
+
+
+def test_adafactor_factored_state_is_small():
+    params = {"w": jnp.zeros((512, 1024), jnp.float32)}
+    opt = optim.make_optimizer("adafactor")
+    st_ = opt.init(params)
+    v = st_.v["w"]
+    assert hasattr(v, "r") and v.r.shape == (512,) and v.c.shape == (1024,)
+
+
+def test_adafactor_small_params_not_factored():
+    params = {"b": jnp.zeros((64,), jnp.float32)}
+    st_ = optim.make_optimizer("adafactor").init(params)
+    assert st_.v["b"].shape == (64,)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 2000))
+def test_int8_quant_roundtrip_bounded_error(n):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=n) * rng.uniform(0.01, 100), jnp.float32)
+    q = quantize_i8(x)
+    err = jnp.abs(dequantize_i8(q) - x)
+    # error bounded by scale/2 per block
+    max_scale = float(jnp.max(q["scale"]))
+    assert float(jnp.max(err)) <= max_scale * 0.5 + 1e-7
+
+
+def test_compression_error_feedback_recovers_signal():
+    """With error feedback, the MEAN of sent gradients converges to the true
+    gradient (bias-free): classic EF-SGD property."""
+    g = jnp.asarray(np.random.default_rng(1).normal(size=(333,)), jnp.float32) * 0.01
+    grads = {"g": g}
+    resid = compression.init_residual(grads)
+    total = jnp.zeros_like(g)
+    n = 20
+    for _ in range(n):
+        sent, resid = compression.compressed_grads_with_feedback(grads, resid)
+        total = total + sent["g"]
+    np.testing.assert_allclose(np.asarray(total / n), np.asarray(g),
+                               atol=5e-4, rtol=0.05)
+
+
+def test_global_norm_clipping_applies():
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    opt = optim.make_optimizer("adamw", lr=0.0)
+    state = opt.init(params)
+    big = {"w": jnp.full((4,), 1e6, jnp.float32)}
+    _, _, metrics = opt.apply(params, big, state)
+    assert float(metrics["grad_norm"]) > 1e5  # reported raw

@@ -1,0 +1,78 @@
+"""Predictor suite tests + hypothesis properties (paper core: KNN/DT/RF)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import predictors as P
+
+RNG = np.random.default_rng(3)
+
+
+def _synthetic(n=800, d=4, noise=0.02):
+    X = RNG.uniform(0.5, 4.0, (n, d)).astype(np.float32)
+    # multiplicative ground truth (like power ~ util * f^3): log-linear
+    y = 5.0 * X[:, 0] * X[:, 1] ** 2 / X[:, 2] + X[:, 3]
+    y = y * np.exp(RNG.normal(0, noise, n))
+    return X, y
+
+
+@pytest.mark.parametrize("name", ["knn", "decision_tree", "random_forest"])
+def test_fits_synthetic_with_low_mape(name):
+    X, y = _synthetic()
+    res = P.kfold_evaluate(name, X, y, k=4)
+    assert res["mape"] < 25.0, res
+    assert res["r2"] > 0.82, res
+
+
+def test_random_forest_beats_single_tree_on_noise():
+    X, y = _synthetic(noise=0.15)
+    tree = P.kfold_evaluate("decision_tree", X, y, k=4)
+    forest = P.kfold_evaluate("random_forest", X, y, k=4)
+    assert forest["mape"] <= tree["mape"] * 1.25
+
+
+def test_metrics_match_definitions():
+    y, p = np.array([1.0, 2.0, 4.0]), np.array([1.1, 1.8, 4.4])
+    assert abs(P.mape(y, p) - 100 * np.mean([0.1, 0.1, 0.1])) < 1e-6
+    assert abs(P.r2_score(y, y) - 1.0) < 1e-12
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(10, 60), st.integers(2, 5))
+def test_tree_predictions_within_training_range(n, d):
+    """CART leaves are means of training targets: predictions are bounded by
+    the training target range (a safety property for the DSE ranking)."""
+    rng = np.random.default_rng(n * 17 + d)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = np.abs(rng.normal(size=n)) + 0.1
+    m = P.DecisionTreeRegressor(max_depth=6).fit(X, y)
+    pred = m.predict(rng.normal(size=(32, d)).astype(np.float32))
+    assert pred.min() >= y.min() / 1.001
+    assert pred.max() <= y.max() * 1.001
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(5, 40))
+def test_knn_k1_interpolates_training_points(n):
+    rng = np.random.default_rng(n)
+    X = rng.uniform(1, 10, (n, 4)).astype(np.float32)
+    y = np.abs(rng.normal(size=n)).astype(np.float64) + 0.5
+    m = P.KNNRegressor(k=1).fit(X, y)
+    pred = m.predict(X)
+    np.testing.assert_allclose(pred, y, rtol=5e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(1.1, 3.0), st.floats(0.1, 0.9))
+def test_predictor_scale_monotonicity(a, b):
+    """Scaling a feature the target grows with must not DECREASE prediction
+    on average (sanity for DVFS-style sweeps)."""
+    n = 200
+    rng = np.random.default_rng(int(a * 100) + int(b * 10))
+    X = rng.uniform(0.5, 2.0, (n, 3)).astype(np.float32)
+    y = X[:, 0] ** 3 * 10 + 1.0
+    m = P.RandomForestRegressor(n_trees=15, max_depth=8).fit(X, y)
+    lo = X.copy(); lo[:, 0] = 0.7
+    hi = X.copy(); hi[:, 0] = 1.8
+    assert m.predict(hi).mean() > m.predict(lo).mean()

@@ -1,0 +1,135 @@
+"""End-to-end behaviour tests: train loop with checkpoint/restart, DSE round
+trip, cost model + roofline consistency, input-spec contracts."""
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_NAMES, LM_SHAPES, SHAPES, get_config
+from repro.core import costmodel, dse, features, predictors
+from repro.hw import get_chip
+from repro.launch.train import train
+
+
+def test_train_loop_improves_and_restarts():
+    with tempfile.TemporaryDirectory() as d:
+        losses1, _ = train("stablelm-1.6b", steps=12, reduced=True, seq_len=32,
+                           batch=4, ckpt_dir=d, ckpt_every=6,
+                           install_signals=False, log_every=100)
+        assert losses1[-1] < losses1[0]
+        losses2, _ = train("stablelm-1.6b", steps=16, reduced=True, seq_len=32,
+                           batch=4, ckpt_dir=d, restore=True, ckpt_every=100,
+                           install_signals=False, log_every=100)
+        assert len(losses2) == 4  # resumed from step 12
+
+
+def test_cost_model_roofline_consistency():
+    ana = {"flops": 1e12, "hbm_bytes": 1e11, "collective_bytes": 1e9,
+           "wire_bytes": 1.5e9}
+    chip = get_chip("tpu-v5e")
+    terms = costmodel.roofline_terms(ana, chip, 256)
+    assert terms["dominant"] == "memory_s"
+    assert abs(terms["compute_s"] - 1e12 / 197e12) < 1e-9
+    res = costmodel.simulate(ana, chip, 256)
+    assert res.latency_s >= max(res.t_compute, res.t_memory, res.t_collective)
+    assert chip.idle_watts <= res.power_w <= chip.tdp_watts
+
+
+def test_dvfs_power_monotone_energy_tradeoff():
+    """Higher frequency -> more power per chip, lower latency (paper Fig. 2)."""
+    ana = {"flops": 5e13, "hbm_bytes": 1e10, "collective_bytes": 1e8,
+           "wire_bytes": 1e8}
+    chip = get_chip("tpu-v5e")
+    r_lo = costmodel.simulate(ana, chip, 16, freq_mhz=500)
+    r_hi = costmodel.simulate(ana, chip, 16, freq_mhz=1600)
+    assert r_hi.power_w > r_lo.power_w
+    assert r_hi.latency_s < r_lo.latency_s
+
+
+def test_feature_vector_stable_and_finite():
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        shapes = cfg.applicable_shapes() if arch != "resnet50" else []
+        for shape in shapes:
+            v = features.extract(cfg, shape, get_chip("tpu-v5e"), 256)
+            assert len(v) == len(features.FEATURE_NAMES)
+            assert np.isfinite(v).all(), (arch, shape.name)
+
+
+def test_dse_fast_path_agrees_with_slow_path():
+    """Predictors trained on the simulator let the fast path find a candidate
+    within 10% of the slow-path optimum (the paper's core claim in miniature)."""
+    cfg = get_config("qwen3_14b")
+    shape = SHAPES["train_4k"]
+    base = {"flops": 3.2e14, "hbm_bytes": 4.5e13, "collective_bytes": 5e11,
+            "wire_bytes": 7e11}
+    space = [c for c in dse.default_space(freq_points=4) if c.n_chips >= 16]
+
+    X, yp, yc = [], [], []
+    for c in space:
+        chip = get_chip(c.chip)
+        ana = dse._scale_analysis(base, 256, c)
+        r = costmodel.simulate(ana, chip, c.n_chips, freq_mhz=c.freq_mhz)
+        X.append(features.extract(cfg, shape, chip, c.n_chips, c.mesh, c.freq_mhz))
+        yp.append(r.power_w)
+        yc.append(r.cycles)
+    rf = predictors.RandomForestRegressor(n_trees=20).fit(np.asarray(X), np.asarray(yp))
+    knn = predictors.KNNRegressor().fit(np.asarray(X), np.asarray(yc))
+
+    cons = dse.Constraint(max_power_w=50_000, min_hbm_fit=False)
+    best_slow, results, _ = dse.slow_path_search(
+        "qwen3_14b", "train_4k", base, 256, 0.5, space, cons)
+    best_fast, _, _ = dse.fast_path_search(
+        "qwen3_14b", "train_4k", rf, knn, space, cons, verify_top_k=5,
+        slow_verify=lambda c: costmodel.simulate(
+            dse._scale_analysis(base, 256, c), get_chip(c.chip), c.n_chips,
+            freq_mhz=c.freq_mhz))
+    e_slow = results[best_slow]["sim"].energy_j
+    e_fast = results[best_fast]["sim"].energy_j
+    assert e_fast <= e_slow * 1.10, (e_slow, e_fast)
+
+
+def test_applicable_shapes_contract():
+    """long_500k only for sub-quadratic archs; 32 compiled LM cells total."""
+    cells = 0
+    for arch in ARCH_NAMES:
+        if arch == "resnet50":
+            continue
+        cfg = get_config(arch)
+        shapes = {s.name for s in cfg.applicable_shapes()}
+        if cfg.sub_quadratic:
+            assert "long_500k" in shapes
+        else:
+            assert "long_500k" not in shapes
+        cells += len(shapes)
+    assert cells == 32
+
+
+def test_param_counts_match_billing_names():
+    """Config param counts are in the ballpark their names advertise."""
+    expect = {"deepseek_v3_671b": 671e9, "deepseek_v2_236b": 236e9,
+              "qwen2_72b": 72e9, "qwen3_14b": 14e9, "granite_20b": 20e9,
+              "stablelm_1_6b": 1.6e9, "mamba2_130m": 130e6,
+              "zamba2_1_2b": 1.2e9, "paligemma_3b": 2.6e9}
+    for name, n in expect.items():
+        got = get_config(name).param_count()
+        assert 0.6 * n < got < 1.45 * n, (name, got / 1e9)
+
+
+def test_offload_decision_flips_with_bandwidth():
+    # LLM-prefill-class request: heavy enough that the cloud slice beats the
+    # edge chip once the uplink clears (paper's Jetson-vs-cloud example)
+    from repro.core import offload
+    local = {"flops": 2e12, "hbm_bytes": 2e10, "collective_bytes": 0.0,
+             "wire_bytes": 0.0}
+    remote = {"flops": 1.2e11, "hbm_bytes": 1.5e9, "collective_bytes": 2e7,
+              "wire_bytes": 2e7}
+    slow = offload.analyze(local, remote, 1.2e7, 3.2e4,
+                           offload.NetworkSpec(bandwidth_bps=1e6))
+    fast = offload.analyze(local, remote, 1.2e7, 3.2e4,
+                           offload.NetworkSpec(bandwidth_bps=1e9))
+    assert not slow.choose_remote_latency
+    assert fast.choose_remote_latency
