@@ -3,10 +3,13 @@
 Sweeps network bandwidth and reports where inference should run — locally on
 an edge TPU or offloaded to a cloud v5e slice — for latency and for battery.
 Mirrors the paper's Jetson-vs-cloud motivating example (7 W local vs 2 W
-offloaded).
+offloaded).  The whole bandwidth sweep is one batched ``sweep_bandwidth``
+call: both censuses are simulated once, the network leg is array math.
 
   PYTHONPATH=src python examples/offload_decision.py
 """
+
+import numpy as np
 
 from repro.core import offload
 
@@ -20,12 +23,13 @@ if __name__ == "__main__":
               "wire_bytes": 0.02e9}
     req, resp = 1.5e6 * 8, 4e3 * 8     # 1.5 MB payload up, 4 KB logits down
 
+    bw_mbps = np.array([2, 10, 50, 200, 1000], np.float64)
+    sweep = offload.sweep_bandwidth(local, remote, req, resp, bw_mbps * 1e6)
+
     print(f"{'bw (Mbps)':>10} {'local (ms)':>11} {'remote (ms)':>12} "
           f"{'latency says':>13} {'battery says':>13}")
-    for bw_mbps in (2, 10, 50, 200, 1000):
-        net = offload.NetworkSpec(bandwidth_bps=bw_mbps * 1e6)
-        d = offload.analyze(local, remote, req, resp, net)
-        print(f"{bw_mbps:>10} {d.local_latency_s * 1e3:>11.2f} "
-              f"{d.remote_latency_s * 1e3:>12.2f} "
-              f"{'offload' if d.choose_remote_latency else 'local':>13} "
-              f"{'offload' if d.choose_remote_battery else 'local':>13}")
+    for i, bw in enumerate(bw_mbps):
+        print(f"{bw:>10.0f} {sweep['local_latency_s'][i] * 1e3:>11.2f} "
+              f"{sweep['remote_latency_s'][i] * 1e3:>12.2f} "
+              f"{'offload' if sweep['choose_remote_latency'][i] else 'local':>13} "
+              f"{'offload' if sweep['choose_remote_battery'][i] else 'local':>13}")

@@ -1,0 +1,38 @@
+"""Version shims for the JAX surface this repo touches.
+
+The codebase targets the modern ``jax.shard_map`` API (``check_vma``); older
+releases (< 0.5) only ship ``jax.experimental.shard_map.shard_map`` with the
+flag spelled ``check_rep``.  Same story for ``Compiled.cost_analysis``, which
+returned a one-element list of dicts before returning the dict directly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new JAX, the experimental spelling on old JAX."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` where available, psum-of-ones otherwise."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def cost_analysis(compiled) -> Dict[str, Any]:
+    """Normalize ``Compiled.cost_analysis()`` to a flat dict across versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)

@@ -23,9 +23,12 @@ Power model (per chip):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional
 
-from repro.hw import ChipSpec, get_chip
+import numpy as np
+
+from repro.hw import CHIP_TABLE, ChipSpec, ChipTable, get_chip
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +56,12 @@ class SimResult:
         return dataclasses.asdict(self)
 
 
+def wire_bytes(analysis: Dict):
+    """Collective wire-bytes of a census, with the documented fallback chain
+    (wire_bytes -> collective_bytes -> 0) shared by every simulate variant."""
+    return analysis.get("wire_bytes", analysis.get("collective_bytes", 0.0))
+
+
 def roofline_terms(analysis: Dict, chip: ChipSpec, n_chips: int) -> Dict:
     """The §Roofline contract.  ``analysis`` holds PER-DEVICE HxA numbers, so
     term = per_device_quantity / per_chip_rate == global / (chips * rate)."""
@@ -78,7 +87,7 @@ def simulate(analysis: Dict, chip: ChipSpec, n_chips: int,
     chip_f = chip.at_frequency(freq_mhz)
     t_comp = analysis["flops"] / chip_f.peak_flops_bf16
     t_mem = analysis["hbm_bytes"] / chip_f.hbm_bw
-    wire = analysis.get("wire_bytes", analysis.get("collective_bytes", 0.0))
+    wire = wire_bytes(analysis)
     t_coll = wire / (chip_f.ici_bw * max(sim.links_used, 1)) if chip_f.ici_bw else 0.0
 
     ts = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
@@ -103,3 +112,148 @@ def simulate(analysis: Dict, chip: ChipSpec, n_chips: int,
 def simulate_by_name(analysis: Dict, chip_name: str, n_chips: int,
                      freq_mhz: Optional[float] = None) -> SimResult:
     return simulate(analysis, get_chip(chip_name), n_chips, freq_mhz)
+
+
+# --- Batched (struct-of-arrays) path ------------------------------------------
+# Same arithmetic as ``simulate`` applied to whole candidate arrays at once:
+# chip properties are gathered from CHIP_TABLE by index, every step is an
+# elementwise array op, so a full DSE space is one pass of vector code instead
+# of a Python loop.  numpy float64 by default (bitwise-matches the scalar
+# path); pass ``xp=jax.numpy`` for a jit-able accelerator variant.
+
+BOTTLENECKS = ("compute", "memory", "collective")
+
+# the chip-table columns simulate_batch actually gathers; pre-gathered
+# ``gathered`` dicts only need (and multi-workload tiling only tiles) these
+SIM_GATHER_FIELDS = ("nominal_freq_mhz", "min_freq_mhz", "max_freq_mhz",
+                     "peak_flops_bf16", "hbm_bw", "ici_bw", "tdp_watts",
+                     "idle_watts")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: ndarray fields
+class SimBatch:
+    """``SimResult`` over N candidates, field-per-array."""
+
+    t_compute: np.ndarray
+    t_memory: np.ndarray
+    t_collective: np.ndarray
+    latency_s: np.ndarray
+    cycles: np.ndarray
+    utilization: np.ndarray
+    power_w: np.ndarray              # per chip
+    energy_j: np.ndarray             # whole slice
+    bottleneck_idx: np.ndarray       # index into BOTTLENECKS
+
+    def __len__(self) -> int:
+        return int(np.shape(self.latency_s)[0])
+
+    def bottleneck(self, i: int) -> str:
+        return BOTTLENECKS[int(self.bottleneck_idx[i])]
+
+    def result(self, i: int) -> SimResult:
+        """Materialize one row as the scalar dataclass."""
+        return SimResult(
+            t_compute=float(self.t_compute[i]),
+            t_memory=float(self.t_memory[i]),
+            t_collective=float(self.t_collective[i]),
+            latency_s=float(self.latency_s[i]),
+            cycles=float(self.cycles[i]),
+            utilization=float(self.utilization[i]),
+            power_w=float(self.power_w[i]),
+            energy_j=float(self.energy_j[i]),
+            bottleneck=self.bottleneck(i))
+
+
+def simulate_batch(analysis: Dict, chip_idx, n_chips,
+                   freq_mhz=None, sim: SimConfig = SimConfig(),
+                   table: ChipTable = CHIP_TABLE, xp=np,
+                   gathered: Optional[Dict] = None) -> SimBatch:
+    """Vectorized ``simulate`` over arrays of candidates.
+
+    ``analysis`` holds per-device arrays (or scalars, broadcast) of flops /
+    hbm_bytes / collective_bytes / wire_bytes; ``chip_idx`` indexes
+    ``table``; ``n_chips`` / ``freq_mhz`` are per-candidate arrays.  With the
+    default ``xp=np`` the arithmetic is float64 and agrees with the scalar
+    path to machine precision; any array namespace with the numpy API (e.g.
+    ``jax.numpy``) works, making the body jit-able.  ``gathered`` (from
+    ``table.gather(chip_idx)``) skips the per-call column gathers when the
+    same candidate batch is swept repeatedly.
+    """
+    n_chips = xp.asarray(n_chips)
+    if gathered is None:
+        gathered = {f: xp.asarray(getattr(table, f))[xp.asarray(chip_idx)]
+                    for f in SIM_GATHER_FIELDS}
+    nominal = gathered["nominal_freq_mhz"]
+    f_min = gathered["min_freq_mhz"]
+    f_max = gathered["max_freq_mhz"]
+    if freq_mhz is None:
+        freq_mhz = nominal
+    freq = xp.clip(xp.asarray(freq_mhz), f_min, f_max)
+
+    peak = gathered["peak_flops_bf16"] * (freq / nominal)
+    hbm_bw = gathered["hbm_bw"]
+    ici_bw = gathered["ici_bw"]
+
+    flops = xp.asarray(analysis["flops"])
+    hbm_bytes = xp.asarray(analysis["hbm_bytes"])
+    wire = xp.asarray(wire_bytes(analysis))
+
+    t_comp = flops / peak
+    t_mem = hbm_bytes / hbm_bw
+    has_ici = ici_bw > 0
+    t_coll = xp.where(
+        has_ici, wire / (xp.where(has_ici, ici_bw, 1.0) * max(sim.links_used, 1)),
+        0.0)
+
+    ts = xp.stack([t_comp, t_mem, t_coll])         # BOTTLENECKS order
+    dom = xp.argmax(ts, axis=0)
+    t_max = xp.max(ts, axis=0)
+    latency = t_max + (1.0 - sim.overlap) * (xp.sum(ts, axis=0) - t_max)
+    latency = xp.maximum(latency, 1e-9)
+
+    # same association as the scalar path (w * (t/latency), summed in the
+    # same order); residual disagreement is 1 ulp from pow() vs array **3
+    util = (sim.w_mxu * (t_comp / latency) + sim.w_hbm * (t_mem / latency)
+            + sim.w_ici * (t_coll / latency))
+    util = xp.clip(util, 0.0, 1.0)
+    tdp = gathered["tdp_watts"]
+    idle = gathered["idle_watts"]
+    power = idle + (tdp - idle) * util * (freq / f_max) ** 3
+    power = xp.minimum(power, tdp)
+
+    # cycles use the caller's (unclamped) frequency, matching ``simulate``;
+    # freq_mhz was defaulted to nominal above if the caller passed None
+    cycles = latency * xp.asarray(freq_mhz) * 1e6
+    return SimBatch(
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        latency_s=latency, cycles=cycles, utilization=t_comp / latency,
+        power_w=power, energy_j=power * latency * n_chips,
+        bottleneck_idx=dom)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_simulate_batch(sim: SimConfig):
+    import jax
+    import jax.numpy as jnp
+
+    def run(flops, hbm_bytes, wire_bytes, chip_idx, n_chips, freq_mhz):
+        batch = simulate_batch(
+            {"flops": flops, "hbm_bytes": hbm_bytes, "wire_bytes": wire_bytes},
+            chip_idx, n_chips, freq_mhz, sim=sim, xp=jnp)
+        return dataclasses.asdict(batch)
+
+    return jax.jit(run)
+
+
+def simulate_batch_jit(analysis: Dict, chip_idx, n_chips, freq_mhz,
+                       sim: SimConfig = SimConfig()) -> SimBatch:
+    """jit-compiled ``simulate_batch`` on the default JAX backend.
+
+    Accelerator path for very large spaces; float32 under the repo's default
+    x64-disabled config, so expect ~1e-6 relative agreement rather than the
+    numpy path's exact match.
+    """
+    out = _jit_simulate_batch(sim)(
+        analysis["flops"], analysis["hbm_bytes"], wire_bytes(analysis),
+        np.asarray(chip_idx, np.int32), n_chips, freq_mhz)
+    return SimBatch(**{k: np.asarray(v) for k, v in out.items()})

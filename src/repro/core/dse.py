@@ -11,20 +11,27 @@ Two exploration modes mirror the paper's comparison:
   * fast path  — rank ALL candidates with the trained ML predictors in one
     vectorized call (microseconds/point), then verify only the top-k with the
     slow path.  The speedup of fast vs slow is a paper deliverable.
+
+Both paths run on struct-of-arrays batch primitives: a ``CandidateBatch``
+packs the space into index/extent/frequency arrays, chip properties come from
+``hw.CHIP_TABLE`` gathers, and ``costmodel.simulate_batch`` /
+``features.extract_batch`` evaluate the whole space in single vector passes.
+``slow_path_search_scalar`` preserves the per-candidate Python loop as the
+agreement oracle (and the benchmark's "before" measurement).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import time
-from typing import Dict, List, Optional, Tuple
+from collections.abc import Mapping
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.configs.base import SHAPES, get_config
 from repro.core import costmodel, features
-from repro.hw import CHIPS, get_chip, frequency_sweep
+from repro.hw import CHIP_TABLE, CHIPS, ChipTable, get_chip, frequency_sweep
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,8 +49,68 @@ class Constraint:
     min_hbm_fit: bool = True                 # state must fit HBM
 
 
-def default_space(freq_points: int = 6) -> List[Candidate]:
-    """The accelerator design space: generation x slice size x DVFS point."""
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: ndarray fields
+class CandidateBatch:
+    """The design space packed struct-of-arrays for batch evaluation.
+
+    ``candidates`` keeps the scalar view (report/API compatibility); the
+    arrays are what the vectorized paths consume.  ``mesh_data``/``mesh_model``
+    are the trailing two mesh extents (1 for unmeshed edge parts), matching
+    ``features.extract``'s reading of ``mesh_shape``.
+    """
+
+    candidates: Tuple[Candidate, ...]
+    chip_idx: np.ndarray                     # int32 [N] -> CHIP_TABLE row
+    n_chips: np.ndarray                      # int64 [N]
+    mesh_data: np.ndarray                    # int64 [N], mesh[-2] or 1
+    mesh_model: np.ndarray                   # int64 [N], mesh[-1]
+    freq_mhz: np.ndarray                     # float64 [N]
+    chip_cols: Optional[Dict[str, np.ndarray]] = None  # CHIP_TABLE.gather cache
+
+    @classmethod
+    def from_candidates(cls, space: Sequence[Candidate],
+                        table: ChipTable = CHIP_TABLE) -> "CandidateBatch":
+        space = tuple(space)
+        chip_idx = table.indices([c.chip for c in space])
+        return cls(
+            candidates=space,
+            chip_idx=chip_idx,
+            n_chips=np.asarray([c.n_chips for c in space], np.int64),
+            mesh_data=np.asarray(
+                [c.mesh[-2] if len(c.mesh) >= 2 else 1 for c in space], np.int64),
+            mesh_model=np.asarray([c.mesh[-1] for c in space], np.int64),
+            freq_mhz=np.asarray([c.freq_mhz for c in space], np.float64),
+            chip_cols=table.gather(chip_idx))
+
+    def __len__(self) -> int:
+        return len(self.candidates)
+
+    def __getitem__(self, i: int) -> Candidate:
+        return self.candidates[i]
+
+    def hbm_bytes(self, table: ChipTable = CHIP_TABLE) -> np.ndarray:
+        """Per-candidate HBM capacity, from the gather cache when present."""
+        if self.chip_cols is not None:
+            return self.chip_cols["hbm_bytes"]
+        return table.hbm_bytes[self.chip_idx]
+
+
+SpaceLike = Union[Sequence[Candidate], CandidateBatch]
+
+
+def as_batch(space: SpaceLike) -> CandidateBatch:
+    if isinstance(space, CandidateBatch):
+        return space
+    return CandidateBatch.from_candidates(space)
+
+
+def default_space(freq_points: int = 12) -> List[Candidate]:
+    """The accelerator design space: generation x slice size x DVFS point.
+
+    The DVFS resolution matches ``hw.frequency_sweep``'s default 12 points
+    (the paper's fine-grained 397-1590 MHz V100S sweep); batch evaluation
+    made the denser default free.
+    """
     out = []
     meshes = [(4, 4), (8, 8), (8, 16), (16, 16), (2, 16, 16)]
     for chip_name, chip in CHIPS.items():
@@ -56,6 +123,12 @@ def default_space(freq_points: int = 6) -> List[Candidate]:
             for f in frequency_sweep(chip_name, freq_points):
                 out.append(Candidate(chip_name, n, mesh, f))
     return out
+
+
+def default_space_batch(freq_points: int = 12) -> CandidateBatch:
+    """``default_space`` packed as a ``CandidateBatch`` (list rides along in
+    ``.candidates``)."""
+    return CandidateBatch.from_candidates(default_space(freq_points))
 
 
 def _scale_analysis(base_analysis: Dict, base_chips: int, cand: Candidate) -> Dict:
@@ -75,13 +148,120 @@ def _scale_analysis(base_analysis: Dict, base_chips: int, cand: Candidate) -> Di
     }
 
 
+def _scale_analysis_batch(base_analysis: Dict, base_chips,
+                          n_chips: np.ndarray) -> Dict[str, np.ndarray]:
+    """``_scale_analysis`` over a whole candidate array at once.
+
+    ``base_analysis`` values and ``base_chips`` may themselves be arrays
+    (broadcast against ``n_chips``) — that is how multi-workload sweeps tile
+    W workloads x N candidates into one flat batch.
+    """
+    base_chips = np.asarray(base_chips, np.float64)
+    nc = np.asarray(n_chips, np.float64)
+    r = base_chips / nc
+    ring = np.where(nc > 1,
+                    ((nc - 1) / nc) / np.maximum((base_chips - 1) / base_chips, 1e-9),
+                    0.0)
+    return {
+        "flops": np.asarray(base_analysis["flops"]) * r,
+        "hbm_bytes": np.asarray(base_analysis["hbm_bytes"]) * r,
+        "collective_bytes": np.asarray(base_analysis["collective_bytes"]) * r * ring,
+        "wire_bytes": np.asarray(base_analysis["wire_bytes"]) * r * ring,
+    }
+
+
+def feasibility_mask(batch: CandidateBatch, sim: costmodel.SimBatch,
+                     constraint: Constraint, state_gb_per_device: float,
+                     base_chips: int,
+                     table: ChipTable = CHIP_TABLE) -> np.ndarray:
+    """Vectorized constraint check: HBM fit, slice power budget, latency."""
+    ok = np.ones(len(batch), bool)
+    if constraint.min_hbm_fit:
+        state_pd = state_gb_per_device * base_chips / batch.n_chips
+        ok &= state_pd * 1e9 <= batch.hbm_bytes(table) * 0.9
+    if constraint.max_power_w is not None:
+        ok &= sim.power_w * batch.n_chips <= constraint.max_power_w
+    if constraint.max_latency_s is not None:
+        ok &= sim.latency_s <= constraint.max_latency_s
+    return ok
+
+
+class BatchSearchResults(Mapping):
+    """Per-candidate results of a batched sweep, API-compatible with the old
+    ``{cand: {"sim": SimResult, "feasible": bool}}`` dict.
+
+    Rows are materialized into scalar ``SimResult`` objects lazily on access,
+    so the batched search never pays a per-candidate Python cost for
+    candidates nobody inspects.  The underlying arrays stay available as
+    ``.sim`` / ``.feasible`` for array-native consumers.
+    """
+
+    def __init__(self, batch: CandidateBatch, sim: costmodel.SimBatch,
+                 feasible: np.ndarray):
+        self.batch = batch
+        self.sim = sim
+        self.feasible = feasible
+        self._index: Optional[Dict[Candidate, int]] = None
+        self._cache: Dict[int, Dict] = {}
+
+    def __getitem__(self, cand: Candidate) -> Dict:
+        if self._index is None:
+            self._index = {c: i for i, c in enumerate(self.batch.candidates)}
+        i = self._index[cand]
+        if i not in self._cache:
+            self._cache[i] = {"sim": self.sim.result(i),
+                              "feasible": bool(self.feasible[i])}
+        return self._cache[i]
+
+    def __iter__(self):
+        return iter(self.batch.candidates)
+
+    def __len__(self) -> int:
+        return len(self.batch)
+
+
+def evaluate_space(base_analysis: Dict, base_chips: int, batch: CandidateBatch,
+                   sim: costmodel.SimConfig = costmodel.SimConfig()
+                   ) -> costmodel.SimBatch:
+    """Scale the base census to every candidate and simulate the whole space
+    in one vector pass."""
+    ana = _scale_analysis_batch(base_analysis, base_chips, batch.n_chips)
+    return costmodel.simulate_batch(ana, batch.chip_idx, batch.n_chips,
+                                    batch.freq_mhz, sim=sim,
+                                    gathered=batch.chip_cols)
+
+
 def slow_path_search(arch: str, shape_name: str, base_analysis: Dict,
                      base_chips: int, state_gb_per_device: float,
-                     space: List[Candidate],
+                     space: SpaceLike,
                      constraint: Constraint = Constraint(),
-                     objective: str = "energy") -> Tuple[Candidate, Dict, float]:
-    """Exhaustive simulator sweep (the paper's 'slow' baseline). Returns
-    (best, per-candidate results, wall_seconds)."""
+                     objective: str = "energy") -> Tuple[Candidate, Mapping, float]:
+    """Exhaustive simulator sweep (the paper's 'slow' baseline), evaluated as
+    ONE batched pass.  Returns (best, per-candidate results, wall_seconds)."""
+    t0 = time.perf_counter()
+    batch = as_batch(space)
+    if not len(batch):
+        return None, {}, time.perf_counter() - t0
+    res = evaluate_space(base_analysis, base_chips, batch)
+    feasible = feasibility_mask(batch, res, constraint, state_gb_per_device,
+                                base_chips)
+    score = res.energy_j if objective == "energy" else res.latency_s
+    score = np.where(feasible, score, np.inf)
+    i = int(np.argmin(score))
+    best = batch.candidates[i] if np.isfinite(score[i]) else None
+    results = BatchSearchResults(batch, res, feasible)
+    return best, results, time.perf_counter() - t0
+
+
+def slow_path_search_scalar(arch: str, shape_name: str, base_analysis: Dict,
+                            base_chips: int, state_gb_per_device: float,
+                            space: SpaceLike,
+                            constraint: Constraint = Constraint(),
+                            objective: str = "energy") -> Tuple[Candidate, Dict, float]:
+    """The seed per-candidate Python loop, kept verbatim as the agreement
+    oracle for ``slow_path_search`` and the benchmark's scalar baseline."""
+    if isinstance(space, CandidateBatch):
+        space = space.candidates
     t0 = time.perf_counter()
     best, best_score, results = None, float("inf"), {}
     for cand in space:
@@ -103,43 +283,44 @@ def slow_path_search(arch: str, shape_name: str, base_analysis: Dict,
 
 
 def fast_path_search(arch: str, shape_name: str, power_model, cycles_model,
-                     space: List[Candidate],
+                     space: SpaceLike,
                      constraint: Constraint = Constraint(),
                      objective: str = "energy",
                      verify_top_k: int = 5,
                      slow_verify=None) -> Tuple[Candidate, Dict, float]:
     """Predictor-ranked search (the paper's fast path).
 
-    One vectorized predict over the whole space, rank by predicted objective,
-    optionally re-verify the top-k with the simulator (callable
-    ``slow_verify(cand) -> SimResult``)."""
+    The design matrix comes from ``features.extract_batch`` (one vector pass,
+    no per-candidate Python), predictions and constraint masks are array ops,
+    and only the top-k survivors are optionally re-verified with the
+    simulator (callable ``slow_verify(cand) -> SimResult``)."""
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     t0 = time.perf_counter()
-    X = np.asarray([features.extract(cfg, shape, get_chip(c.chip), c.n_chips,
-                                     mesh_shape=c.mesh, freq_mhz=c.freq_mhz)
-                    for c in space], np.float32)
+    batch = as_batch(space)
+    X = features.extract_batch(cfg, shape, batch.chip_idx, batch.n_chips,
+                               batch.mesh_data, batch.mesh_model,
+                               batch.freq_mhz)
     p_watts = power_model.predict(X)                 # per chip
     p_cycles = cycles_model.predict(X)
-    freqs = np.asarray([c.freq_mhz for c in space]) * 1e6
-    n = np.asarray([c.n_chips for c in space], np.float64)
+    freqs = batch.freq_mhz * 1e6
+    n = batch.n_chips.astype(np.float64)
     lat = p_cycles / freqs
     energy = p_watts * n * lat
-    feasible = np.ones(len(space), bool)
+    feasible = np.ones(len(batch), bool)
     if constraint.max_power_w is not None:
         feasible &= (p_watts * n) <= constraint.max_power_w
     if constraint.max_latency_s is not None:
         feasible &= lat <= constraint.max_latency_s
     if constraint.min_hbm_fit:
-        for i, c in enumerate(space):
-            chip = get_chip(c.chip)
-            need = cfg.param_count() * 2 * (3.0 if shape.kind == "train" else 1.0)
-            feasible[i] &= need / c.n_chips <= chip.hbm_bytes * 0.9
+        need = cfg.param_count() * 2 * (3.0 if shape.kind == "train" else 1.0)
+        feasible &= need / n <= batch.hbm_bytes() * 0.9
     score = energy if objective == "energy" else lat
     score = np.where(feasible, score, np.inf)
     order = np.argsort(score)
     elapsed = time.perf_counter() - t0
-    top = [space[i] for i in order[:verify_top_k] if np.isfinite(score[i])]
+    top = [batch.candidates[i] for i in order[:verify_top_k]
+           if np.isfinite(score[i])]
     if not top:
         return None, {}, elapsed
     best = top[0]
@@ -151,3 +332,120 @@ def fast_path_search(arch: str, shape_name: str, power_model, cycles_model,
     details = {"predicted_power_w": p_watts, "predicted_cycles": p_cycles,
                "order": order[:verify_top_k]}
     return best, details, elapsed
+
+
+# --- Multi-objective / multi-workload sweep -----------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One (arch, shape) cell to sweep: its compiled census + footprint."""
+
+    arch: str
+    shape: str
+    base_analysis: Dict
+    base_chips: int
+    state_gb_per_device: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: ndarray fields
+class ParetoFrontier:
+    """Energy/latency frontier of one workload over the candidate space."""
+
+    workload: Workload
+    candidates: Tuple[Candidate, ...]        # frontier members
+    energy_j: np.ndarray                     # [F], aligned with candidates
+    latency_s: np.ndarray                    # [F]
+    indices: np.ndarray                      # [F] rows into the swept batch
+    feasible_count: int
+
+    def __len__(self) -> int:
+        return len(self.candidates)
+
+
+def pareto_mask(energy: np.ndarray, latency: np.ndarray,
+                feasible: np.ndarray) -> np.ndarray:
+    """Non-dominated feasible points of the (energy, latency) minimization,
+    as a boolean mask.
+
+    Skyline sweep — sort by (latency, energy) and keep the running energy
+    minimum — O(N log N) time, O(N) memory, so it survives the
+    orders-of-magnitude space scaling the batched engine is built for.
+    j dominates i iff j is feasible, <= on both axes, strictly better on
+    one; equal (energy, latency) duplicates do not dominate each other.
+    """
+    e = np.asarray(energy, np.float64)
+    l = np.asarray(latency, np.float64)
+    feas = np.asarray(feasible, bool)
+    mask = np.zeros(e.shape, bool)
+    idx = np.flatnonzero(feas)
+    if idx.size == 0:
+        return mask
+    order = np.lexsort((e[idx], l[idx]))
+    es, ls = e[idx][order], l[idx][order]
+    # min energy over all strictly-smaller latencies (inf for the first group)
+    first = np.searchsorted(ls, ls, side="left")
+    prefix_min = np.minimum.accumulate(es)
+    best_before = np.where(first > 0, prefix_min[np.maximum(first - 1, 0)],
+                           np.inf)
+    # survive: not beaten by a faster point (strict latency, <= energy) and
+    # tied-latency points only if they hold the group's energy minimum
+    nondom = (es < best_before) & (es <= es[first])
+    mask[idx[order[nondom]]] = True
+    return mask
+
+
+def pareto_search(workloads: Union[Workload, Sequence[Workload]],
+                  space: SpaceLike,
+                  constraint: Constraint = Constraint()
+                  ) -> Dict[Tuple[str, str], ParetoFrontier]:
+    """Multi-objective DSE: the energy/latency Pareto frontier per workload.
+
+    All W workloads x N candidates are evaluated in ONE ``simulate_batch``
+    call by tiling the candidate arrays and broadcasting each workload's
+    census across its tile — sweeping another workload costs no extra Python.
+    Returns ``{(arch, shape): ParetoFrontier}``.
+    """
+    if isinstance(workloads, Workload):
+        workloads = [workloads]
+    keys = [(wl.arch, wl.shape) for wl in workloads]
+    if len(set(keys)) != len(keys):
+        raise ValueError(f"duplicate (arch, shape) workload keys in {keys}; "
+                         "disambiguate (e.g. suffix the shape with the pod "
+                         "tag) — results are keyed by (arch, shape)")
+    batch = as_batch(space)
+    n = len(batch)
+    w = len(workloads)
+    if w == 0:
+        return {}
+    tile = lambda a: np.tile(np.asarray(a), w)
+    rep = lambda vals: np.repeat(np.asarray(vals, np.float64), n)
+    base = {k: rep([wl.base_analysis[k] for wl in workloads])
+            for k in ("flops", "hbm_bytes", "collective_bytes", "wire_bytes")}
+    base_chips = rep([wl.base_chips for wl in workloads])
+    ana = _scale_analysis_batch(base, base_chips, tile(batch.n_chips))
+    gathered = ({k: tile(batch.chip_cols[k])
+                 for k in costmodel.SIM_GATHER_FIELDS}
+                if batch.chip_cols is not None else None)
+    sim = costmodel.simulate_batch(ana, tile(batch.chip_idx),
+                                   tile(batch.n_chips), tile(batch.freq_mhz),
+                                   gathered=gathered)
+    out = {}
+    for wi, wl in enumerate(workloads):
+        sl = slice(wi * n, (wi + 1) * n)
+        row = costmodel.SimBatch(**{
+            f.name: getattr(sim, f.name)[sl]
+            for f in dataclasses.fields(costmodel.SimBatch)})
+        feasible = feasibility_mask(batch, row, constraint,
+                                    wl.state_gb_per_device, wl.base_chips)
+        mask = pareto_mask(row.energy_j, row.latency_s, feasible)
+        idx = np.flatnonzero(mask)
+        order = idx[np.argsort(row.latency_s[idx])]
+        out[(wl.arch, wl.shape)] = ParetoFrontier(
+            workload=wl,
+            candidates=tuple(batch.candidates[i] for i in order),
+            energy_j=row.energy_j[order],
+            latency_s=row.latency_s[order],
+            indices=order,
+            feasible_count=int(feasible.sum()))
+    return out

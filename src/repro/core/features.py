@@ -19,11 +19,12 @@ Everything here must stay cheap: called per design point inside DSE sweeps.
 
 from __future__ import annotations
 
-import math
 from typing import Dict, List
 
+import numpy as np
+
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.hw import ChipSpec
+from repro.hw import CHIP_TABLE, ChipSpec, ChipTable
 
 FEATURE_NAMES: List[str] = [
     # hardware (a)
@@ -40,9 +41,13 @@ FEATURE_NAMES: List[str] = [
 ]
 
 
-def analytic_counts(cfg: ArchConfig, shape: ShapeConfig, n_chips: int,
-                    mesh_model: int) -> Dict[str, float]:
-    """Pencil-and-paper per-device flops/bytes/collective estimates."""
+def analytic_counts_batch(cfg: ArchConfig, shape: ShapeConfig, n_chips,
+                          mesh_model) -> Dict[str, np.ndarray]:
+    """Pencil-and-paper per-device flops/bytes/collective estimates,
+    vectorized over candidate arrays ``n_chips`` / ``mesh_model`` (scalars
+    broadcast)."""
+    n_chips = np.asarray(n_chips)
+    mesh_model = np.asarray(mesh_model)
     n_active = cfg.param_count(active=True)
     n_total = cfg.param_count(active=False)
     if shape.kind == "train":
@@ -76,7 +81,8 @@ def analytic_counts(cfg: ArchConfig, shape: ShapeConfig, n_chips: int,
         w_bytes = 3.0 * n_total * (bpp + 4.0) / n_chips
         act_bytes = 14.0 * cfg.num_layers * cfg.d_model * tokens * bpp / n_chips
     elif shape.kind == "prefill":
-        w_bytes = n_total * bpp / max(n_chips // 8, 1) / 8
+        w_bytes = n_total * bpp / np.maximum(
+            n_chips.astype(np.int64) // 8, 1) / 8
         act_bytes = 8.0 * cfg.num_layers * cfg.d_model * tokens * bpp / n_chips
     else:
         w_bytes = n_total * bpp / n_chips * mesh_model  # weights re-read per token
@@ -87,13 +93,20 @@ def analytic_counts(cfg: ArchConfig, shape: ShapeConfig, n_chips: int,
     # collectives: TP all-reduces (2/layer of the activation block) + FSDP
     # weight gathers (params/device per step) + MoE dispatch
     act_block = tokens / n_chips * cfg.d_model * bpp
-    coll = 4.0 * cfg.num_layers * act_block * (mesh_model - 1) / max(mesh_model, 1)
-    coll += n_total * bpp / n_chips * (2.0 if shape.kind == "train" else 1.0)
+    coll = 4.0 * cfg.num_layers * act_block * (mesh_model - 1) / np.maximum(mesh_model, 1)
+    coll = coll + n_total * bpp / n_chips * (2.0 if shape.kind == "train" else 1.0)
     if cfg.num_experts:
-        coll += 2.0 * cfg.experts_per_token * act_block
-    intensity = flops_pd / max(hbm, 1.0)
+        coll = coll + 2.0 * cfg.experts_per_token * act_block
+    intensity = flops_pd / np.maximum(hbm, 1.0)
     return {"an_flops_pd_t": flops_pd / 1e12, "an_hbm_gb_pd": hbm / 1e9,
             "an_coll_gb_pd": coll / 1e9, "an_intensity": intensity}
+
+
+def analytic_counts(cfg: ArchConfig, shape: ShapeConfig, n_chips: int,
+                    mesh_model: int) -> Dict[str, float]:
+    """Scalar view of ``analytic_counts_batch`` (kept for per-point callers)."""
+    an = analytic_counts_batch(cfg, shape, n_chips, mesh_model)
+    return {k: float(v) for k, v in an.items()}
 
 
 def _kv_bytes_per_token(cfg: ArchConfig) -> float:
@@ -104,31 +117,35 @@ def _kv_bytes_per_token(cfg: ArchConfig) -> float:
     return 2.0 * cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim
 
 
-def extract(cfg: ArchConfig, shape: ShapeConfig, chip: ChipSpec, n_chips: int,
-            mesh_shape=(16, 16), freq_mhz: float | None = None) -> List[float]:
-    """One design point -> fixed-order feature vector (floats)."""
-    freq = freq_mhz if freq_mhz is not None else chip.nominal_freq_mhz
-    chip_f = chip.at_frequency(freq)
-    mesh_data = mesh_shape[-2] if len(mesh_shape) >= 2 else 1
-    mesh_model = mesh_shape[-1]
-    an = analytic_counts(cfg, shape, n_chips, mesh_model)
-    t_comp = an["an_flops_pd_t"] * 1e12 / chip_f.peak_flops_bf16 * 1e3
-    t_mem = an["an_hbm_gb_pd"] * 1e9 / chip_f.hbm_bw * 1e3
-    t_coll = (an["an_coll_gb_pd"] * 1e9 / chip_f.ici_bw * 1e3
-              if chip_f.ici_bw else 0.0)
+def _feature_columns(cfg: ArchConfig, shape: ShapeConfig, *, peak, hbm_bw,
+                     hbm_bytes, ici_bw, freq_mhz, tdp, idle, n_chips,
+                     mesh_data, mesh_model) -> Dict[str, np.ndarray]:
+    """FEATURE_NAMES -> column, vectorized over candidates (scalars broadcast).
+
+    Hardware args are the already-derated (frequency-clamped/scaled) chip
+    numbers except ``freq_mhz``, which is the caller's raw DVFS point.
+    """
+    an = analytic_counts_batch(cfg, shape, n_chips, mesh_model)
+    t_comp = an["an_flops_pd_t"] * 1e12 / peak * 1e3
+    t_mem = an["an_hbm_gb_pd"] * 1e9 / hbm_bw * 1e3
+    has_ici = np.asarray(ici_bw) > 0
+    t_coll = np.where(has_ici,
+                      an["an_coll_gb_pd"] * 1e9 / np.where(has_ici, ici_bw, 1.0) * 1e3,
+                      0.0)
     an = {**an, "an_t_comp_ms": t_comp, "an_t_mem_ms": t_mem,
-          "an_t_coll_ms": t_coll, "an_t_max_ms": max(t_comp, t_mem, t_coll)}
-    vals = {
-        "peak_tflops": chip_f.peak_flops_bf16 / 1e12,
-        "hbm_gbps": chip_f.hbm_bw / 1e9,
-        "hbm_gb": chip_f.hbm_bytes / 1e9,
-        "ici_gbps": chip_f.ici_bw / 1e9,
-        "freq_ghz": freq / 1e3,
-        "n_chips": float(n_chips),
-        "mesh_data": float(mesh_data),
-        "mesh_model": float(mesh_model),
-        "tdp_w": chip_f.tdp_watts,
-        "idle_w": chip_f.idle_watts,
+          "an_t_coll_ms": t_coll,
+          "an_t_max_ms": np.maximum(np.maximum(t_comp, t_mem), t_coll)}
+    return {
+        "peak_tflops": np.asarray(peak) / 1e12,
+        "hbm_gbps": np.asarray(hbm_bw) / 1e9,
+        "hbm_gb": np.asarray(hbm_bytes) / 1e9,
+        "ici_gbps": np.asarray(ici_bw) / 1e9,
+        "freq_ghz": np.asarray(freq_mhz) / 1e3,
+        "n_chips": np.asarray(n_chips, np.float64),
+        "mesh_data": np.asarray(mesh_data, np.float64),
+        "mesh_model": np.asarray(mesh_model, np.float64),
+        "tdp_w": np.asarray(tdp, np.float64),
+        "idle_w": np.asarray(idle, np.float64),
         "layers": float(cfg.num_layers + cfg.encoder_layers),
         "d_model": float(cfg.d_model),
         "heads": float(cfg.num_heads),
@@ -147,4 +164,45 @@ def extract(cfg: ArchConfig, shape: ShapeConfig, chip: ChipSpec, n_chips: int,
         "tokens_m": shape.tokens / 1e6,
         **an,
     }
+
+
+def extract(cfg: ArchConfig, shape: ShapeConfig, chip: ChipSpec, n_chips: int,
+            mesh_shape=(16, 16), freq_mhz: float | None = None) -> List[float]:
+    """One design point -> fixed-order feature vector (floats)."""
+    freq = freq_mhz if freq_mhz is not None else chip.nominal_freq_mhz
+    chip_f = chip.at_frequency(freq)
+    mesh_data = mesh_shape[-2] if len(mesh_shape) >= 2 else 1
+    mesh_model = mesh_shape[-1]
+    vals = _feature_columns(
+        cfg, shape, peak=chip_f.peak_flops_bf16, hbm_bw=chip_f.hbm_bw,
+        hbm_bytes=chip_f.hbm_bytes, ici_bw=chip_f.ici_bw, freq_mhz=freq,
+        tdp=chip_f.tdp_watts, idle=chip_f.idle_watts, n_chips=n_chips,
+        mesh_data=mesh_data, mesh_model=mesh_model)
     return [float(vals[k]) for k in FEATURE_NAMES]
+
+
+def extract_batch(cfg: ArchConfig, shape: ShapeConfig, chip_idx, n_chips,
+                  mesh_data, mesh_model, freq_mhz,
+                  table: ChipTable = CHIP_TABLE) -> np.ndarray:
+    """Whole candidate arrays -> [N, n_features] float32 matrix in one pass.
+
+    Chip properties are gathered from ``table`` by ``chip_idx``; no Python
+    per-candidate loop, so building the fast-path design matrix scales to
+    arbitrarily large spaces.  Row i equals ``extract`` for candidate i.
+    """
+    chip_idx = np.asarray(chip_idx)
+    freq_raw = (table.nominal_freq_mhz[chip_idx] if freq_mhz is None
+                else np.asarray(freq_mhz, np.float64))
+    freq = np.clip(freq_raw, table.min_freq_mhz[chip_idx],
+                   table.max_freq_mhz[chip_idx])
+    peak = table.peak_flops_bf16[chip_idx] * (freq / table.nominal_freq_mhz[chip_idx])
+    vals = _feature_columns(
+        cfg, shape, peak=peak, hbm_bw=table.hbm_bw[chip_idx],
+        hbm_bytes=table.hbm_bytes[chip_idx], ici_bw=table.ici_bw[chip_idx],
+        freq_mhz=freq_raw, tdp=table.tdp_watts[chip_idx],
+        idle=table.idle_watts[chip_idx], n_chips=n_chips,
+        mesh_data=mesh_data, mesh_model=mesh_model)
+    n = np.shape(chip_idx)[0]
+    cols = [np.broadcast_to(np.asarray(vals[k], np.float64), (n,))
+            for k in FEATURE_NAMES]
+    return np.stack(cols, axis=1).astype(np.float32)

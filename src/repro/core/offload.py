@@ -15,8 +15,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
+import numpy as np
+
 from repro.core import costmodel
-from repro.hw import get_chip
+from repro.hw import chip_index, get_chip
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,3 +70,44 @@ def analyze(local_analysis: Dict, remote_analysis: Dict,
         choose_remote_latency=remote_latency < local.latency_s,
         choose_remote_battery=remote_edge_energy < local.energy_j,
     )
+
+
+def sweep_bandwidth(local_analysis: Dict, remote_analysis: Dict,
+                    request_bytes: float, response_bytes: float,
+                    bandwidths_bps, net: NetworkSpec = NetworkSpec(),
+                    local_chip: str = "tpu-edge", remote_chip: str = "tpu-v5e",
+                    remote_chips: int = 4) -> Dict[str, np.ndarray]:
+    """``analyze`` over a whole uplink-bandwidth array in one batched pass.
+
+    Both compute censuses are simulated once via ``simulate_batch`` (a
+    two-row batch); the network leg is elementwise over ``bandwidths_bps``.
+    Returns arrays keyed like ``OffloadDecision`` fields plus
+    ``bandwidth_bps``.
+    """
+    bw = np.asarray(bandwidths_bps, np.float64)
+    wire = costmodel.wire_bytes
+    sim = costmodel.simulate_batch(
+        {"flops": np.asarray([local_analysis["flops"],
+                              remote_analysis["flops"]]),
+         "hbm_bytes": np.asarray([local_analysis["hbm_bytes"],
+                                  remote_analysis["hbm_bytes"]]),
+         "wire_bytes": np.asarray([wire(local_analysis),
+                                   wire(remote_analysis)])},
+        np.asarray([chip_index(local_chip), chip_index(remote_chip)]),
+        np.asarray([1, remote_chips]))
+    t_up = request_bytes / bw
+    t_down = response_bytes / net.downlink_bps
+    remote_latency = sim.latency_s[1] + t_up + t_down + net.rtt_s
+    e_radio = t_up * net.tx_power_w + t_down * net.rx_power_w
+    remote_edge_energy = e_radio + get_chip(local_chip).idle_watts * remote_latency
+    ones = np.ones_like(bw)
+    return {
+        "bandwidth_bps": bw,
+        "local_latency_s": sim.latency_s[0] * ones,
+        "remote_latency_s": remote_latency,
+        "local_energy_j": sim.energy_j[0] * ones,
+        "remote_edge_energy_j": remote_edge_energy,
+        "remote_total_energy_j": remote_edge_energy + sim.energy_j[1],
+        "choose_remote_latency": remote_latency < sim.latency_s[0],
+        "choose_remote_battery": remote_edge_energy < sim.energy_j[0],
+    }

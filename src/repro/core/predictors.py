@@ -19,6 +19,7 @@ Implementation notes:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -148,23 +149,49 @@ def _build_cart(X: np.ndarray, y: np.ndarray, max_depth: int, min_leaf: int,
     return arr
 
 
-def _tree_predict_jnp(arr: _TreeArrays, X: jnp.ndarray, max_depth: int) -> jnp.ndarray:
-    feat = jnp.asarray(arr.feature)
-    thr = jnp.asarray(arr.threshold)
-    left = jnp.asarray(arr.left)
-    right = jnp.asarray(arr.right)
-    val = jnp.asarray(arr.value)
-    node = jnp.zeros(X.shape[0], jnp.int32)
+@functools.partial(jax.jit, static_argnames=("max_depth",))
+def _forest_predict_jnp(feat, thr, left, right, val, X, *, max_depth: int):
+    """Level-synchronous walk of T stacked trees over N samples, jitted.
+
+    feat/thr/left/right/val: [T, n_nodes] padded per-tree arrays; X: [N, F].
+    Returns [T, N] leaf values.  One compiled kernel evaluates the whole
+    forest x design-space batch — the paper's "microseconds per point" path.
+    """
+    T, N = feat.shape[0], X.shape[0]
+    node = jnp.zeros((T, N), jnp.int32)
+    sample = jnp.arange(N)[None, :]
 
     def step(node, _):
-        f = feat[node]
+        f = jnp.take_along_axis(feat, node, axis=1)          # [T, N]
         is_leaf = f < 0
-        x = jnp.take_along_axis(X, jnp.maximum(f, 0)[:, None], axis=1)[:, 0]
-        nxt = jnp.where(x <= thr[node], left[node], right[node])
+        x = X[sample, jnp.maximum(f, 0)]                     # [T, N]
+        nxt = jnp.where(x <= jnp.take_along_axis(thr, node, axis=1),
+                        jnp.take_along_axis(left, node, axis=1),
+                        jnp.take_along_axis(right, node, axis=1))
         return jnp.where(is_leaf, node, nxt), None
 
     node, _ = jax.lax.scan(step, node, None, length=max_depth + 1)
-    return val[node]
+    return jnp.take_along_axis(val, node, axis=1)
+
+
+def _stack_trees(trees: List[_TreeArrays]) -> tuple:
+    """Pad every tree to the forest's max node count and stack [T, n_nodes]."""
+    m = max(t.feature.shape[0] for t in trees)
+    pad = lambda a, fill: np.stack(
+        [np.concatenate([x, np.full(m - x.shape[0], fill, x.dtype)])
+         for x in a])
+    return (pad([t.feature for t in trees], -1),
+            pad([t.threshold for t in trees], 0.0),
+            pad([t.left for t in trees], 0),
+            pad([t.right for t in trees], 0),
+            pad([t.value for t in trees], 0.0))
+
+
+def _tree_predict_jnp(arr: _TreeArrays, X: jnp.ndarray, max_depth: int) -> jnp.ndarray:
+    out = _forest_predict_jnp(arr.feature[None], arr.threshold[None],
+                              arr.left[None], arr.right[None], arr.value[None],
+                              X, max_depth=max_depth)
+    return out[0]
 
 
 @dataclasses.dataclass
@@ -196,6 +223,7 @@ class RandomForestRegressor:
     feature_frac: float = 0.7
     log_target: bool = True
     _trees: Optional[List[_TreeArrays]] = None
+    _stacked: Optional[tuple] = None
 
     def fit(self, X, y, seed: int = 0):
         X = np.asarray(X, np.float32)
@@ -208,12 +236,15 @@ class RandomForestRegressor:
             boot = rng.integers(0, n, n)                    # bootstrap sample
             self._trees.append(_build_cart(X[boot], yt[boot], self.max_depth,
                                            self.min_leaf, rng, self.feature_frac))
+        self._stacked = _stack_trees(self._trees)
         return self
 
     def predict(self, X):
-        Xj = jnp.asarray(X, jnp.float32)
-        preds = jnp.stack([_tree_predict_jnp(t, Xj, self.max_depth)
-                           for t in self._trees])
+        if self._stacked is None:           # fitted by an older pickle/caller
+            self._stacked = _stack_trees(self._trees)
+        preds = _forest_predict_jnp(*self._stacked,
+                                    jnp.asarray(X, jnp.float32),
+                                    max_depth=self.max_depth)
         p = np.asarray(jnp.mean(preds, axis=0), np.float64)
         return np.exp(p) if self.log_target else p
 

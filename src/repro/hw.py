@@ -13,7 +13,9 @@ mandated for this repro: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Tuple
+
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,6 +128,69 @@ CHIPS: Dict[str, ChipSpec] = {
 }
 
 DEFAULT_CHIP = "tpu-v5e"
+
+
+# --- Struct-of-arrays chip table ---------------------------------------------
+# Batched DSE evaluates thousands of candidates per call; chip lookup must be
+# an array gather (table.field[chip_idx]), not a dict hit per candidate.
+
+_TABLE_FIELDS = ("peak_flops_bf16", "hbm_bw", "hbm_bytes", "ici_bw",
+                 "ici_links", "nominal_freq_mhz", "min_freq_mhz",
+                 "max_freq_mhz", "tdp_watts", "idle_watts", "vmem_bytes",
+                 "mxu_dim")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: ndarray fields
+class ChipTable:
+    """``CHIPS`` packed field-per-array (float64), indexed by chip id."""
+
+    names: Tuple[str, ...]
+    specs: Tuple[ChipSpec, ...]
+    peak_flops_bf16: np.ndarray
+    hbm_bw: np.ndarray
+    hbm_bytes: np.ndarray
+    ici_bw: np.ndarray
+    ici_links: np.ndarray
+    nominal_freq_mhz: np.ndarray
+    min_freq_mhz: np.ndarray
+    max_freq_mhz: np.ndarray
+    tdp_watts: np.ndarray
+    idle_watts: np.ndarray
+    vmem_bytes: np.ndarray
+    mxu_dim: np.ndarray
+
+    @classmethod
+    def from_chips(cls, chips: Dict[str, ChipSpec]) -> "ChipTable":
+        names = tuple(chips)
+        cols = {f: np.asarray([getattr(chips[n], f) for n in names], np.float64)
+                for f in _TABLE_FIELDS}
+        return cls(names=names, specs=tuple(chips[n] for n in names), **cols)
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+    def index(self, name: str) -> int:
+        return self.names.index(name)
+
+    def indices(self, names) -> np.ndarray:
+        lut = {n: i for i, n in enumerate(self.names)}
+        return np.asarray([lut[n] for n in names], np.int32)
+
+    def spec(self, idx: int) -> ChipSpec:
+        return self.specs[int(idx)]
+
+    def gather(self, chip_idx) -> Dict[str, np.ndarray]:
+        """All columns gathered at ``chip_idx`` — precompute once per
+        candidate batch so repeated sweeps skip the per-call fancy-indexing."""
+        idx = np.asarray(chip_idx)
+        return {f: getattr(self, f)[idx] for f in _TABLE_FIELDS}
+
+
+CHIP_TABLE = ChipTable.from_chips(CHIPS)
+
+
+def chip_index(name: str = DEFAULT_CHIP) -> int:
+    return CHIP_TABLE.index(name)
 
 
 def get_chip(name: str = DEFAULT_CHIP, freq_mhz: float | None = None) -> ChipSpec:

@@ -129,7 +129,8 @@ def _memory_dict(compiled) -> Dict:
 
 def _cost_dict(compiled) -> Dict:
     try:
-        ca = dict(compiled.cost_analysis())
+        from repro import compat
+        ca = compat.cost_analysis(compiled)
     except Exception:
         ca = {}
     return {"flops": float(ca.get("flops", 0.0)),

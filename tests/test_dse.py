@@ -1,0 +1,223 @@
+"""Batched DSE engine tests: batch-vs-scalar agreement, fast-path ranking,
+Pareto frontier / constraint-mask contracts."""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, get_config
+from repro.core import costmodel, dse, features, offload, predictors
+from repro.hw import CHIP_TABLE, CHIPS, chip_index, get_chip
+
+BASE = {"flops": 3.2e14, "hbm_bytes": 4.5e13, "collective_bytes": 5e11,
+        "wire_bytes": 7e11}
+BASE_CHIPS = 256
+STATE_GB = 0.5
+
+
+def _rel(a, b):
+    return abs(a - b) / max(abs(b), 1e-300)
+
+
+# --- (a) simulate_batch == scalar simulate over the whole default space -------
+
+
+def test_simulate_batch_matches_scalar_over_default_space():
+    batch = dse.default_space_batch()
+    res = dse.evaluate_space(BASE, BASE_CHIPS, batch)
+    for i, cand in enumerate(batch.candidates):
+        ref = costmodel.simulate(
+            dse._scale_analysis(BASE, BASE_CHIPS, cand), get_chip(cand.chip),
+            cand.n_chips, freq_mhz=cand.freq_mhz)
+        got = res.result(i)
+        for field in ("t_compute", "t_memory", "t_collective", "latency_s",
+                      "cycles", "utilization", "power_w", "energy_j"):
+            assert _rel(getattr(got, field), getattr(ref, field)) <= 1e-6, \
+                (cand, field)
+        assert got.bottleneck == ref.bottleneck, cand
+
+
+def test_simulate_batch_default_frequency_and_scalar_broadcast():
+    idx = np.asarray([chip_index("tpu-v5e"), chip_index("tpu-edge")])
+    res = costmodel.simulate_batch(
+        {"flops": 1e12, "hbm_bytes": 1e10, "collective_bytes": 0.0,
+         "wire_bytes": 0.0}, idx, np.asarray([16, 1]))
+    for i, name in enumerate(("tpu-v5e", "tpu-edge")):
+        ref = costmodel.simulate(
+            {"flops": 1e12, "hbm_bytes": 1e10, "collective_bytes": 0.0,
+             "wire_bytes": 0.0}, get_chip(name), [16, 1][i])
+        assert _rel(res.result(i).energy_j, ref.energy_j) <= 1e-6
+
+
+def test_extract_batch_matches_scalar_extract():
+    cfg = get_config("qwen3_14b")
+    shape = SHAPES["train_4k"]
+    batch = dse.default_space_batch(freq_points=4)
+    X = features.extract_batch(cfg, shape, batch.chip_idx, batch.n_chips,
+                               batch.mesh_data, batch.mesh_model,
+                               batch.freq_mhz)
+    assert X.shape == (len(batch), len(features.FEATURE_NAMES))
+    for i, c in enumerate(batch.candidates):
+        row = features.extract(cfg, shape, get_chip(c.chip), c.n_chips,
+                               mesh_shape=c.mesh, freq_mhz=c.freq_mhz)
+        np.testing.assert_allclose(X[i], np.asarray(row, np.float32),
+                                   rtol=1e-6)
+
+
+def test_slow_path_batched_matches_scalar_loop():
+    cons = dse.Constraint(max_power_w=50_000, min_hbm_fit=True)
+    space = dse.default_space(freq_points=4)
+    b_new, r_new, _ = dse.slow_path_search(
+        "qwen3_14b", "train_4k", BASE, BASE_CHIPS, STATE_GB, space, cons)
+    b_old, r_old, _ = dse.slow_path_search_scalar(
+        "qwen3_14b", "train_4k", BASE, BASE_CHIPS, STATE_GB, space, cons)
+    assert b_new == b_old
+    assert len(r_new) == len(r_old) == len(space)
+    for c in space:
+        assert r_new[c]["feasible"] == r_old[c]["feasible"], c
+        assert _rel(r_new[c]["sim"].energy_j, r_old[c]["sim"].energy_j) <= 1e-6
+
+
+# --- (b) fast-path top-1 lands in the slow-path top-k -------------------------
+
+
+def test_fast_path_top1_within_slow_path_topk():
+    cfg_name, shape_name = "qwen3_14b", "train_4k"
+    cfg = get_config(cfg_name)
+    shape = SHAPES[shape_name]
+    batch = dse.default_space_batch(freq_points=4)
+    cons = dse.Constraint(max_power_w=50_000, min_hbm_fit=False)
+
+    # train predictors on the space itself (fixed seed, deterministic)
+    X = features.extract_batch(cfg, shape, batch.chip_idx, batch.n_chips,
+                               batch.mesh_data, batch.mesh_model,
+                               batch.freq_mhz)
+    sim = dse.evaluate_space(BASE, BASE_CHIPS, batch)
+    rf = predictors.RandomForestRegressor(n_trees=20).fit(
+        X, np.asarray(sim.power_w), seed=0)
+    knn = predictors.KNNRegressor().fit(X, np.asarray(sim.cycles))
+
+    best_fast, _, _ = dse.fast_path_search(
+        cfg_name, shape_name, rf, knn, batch, cons, verify_top_k=1)
+    _, results, _ = dse.slow_path_search(
+        cfg_name, shape_name, BASE, BASE_CHIPS, STATE_GB, batch, cons)
+    feasible = results.feasible
+    energy = np.where(feasible, np.asarray(results.sim.energy_j), np.inf)
+    k = 5
+    topk = {batch.candidates[i] for i in np.argsort(energy)[:k]}
+    assert best_fast in topk, (best_fast, topk)
+
+
+# --- (c) Pareto frontier + constraint masks -----------------------------------
+
+
+def _dominates(e1, l1, e2, l2):
+    return e1 <= e2 and l1 <= l2 and (e1 < e2 or l1 < l2)
+
+
+def test_pareto_frontier_mutually_non_dominated():
+    batch = dse.default_space_batch()
+    wls = [dse.Workload("qwen3_14b", "train_4k", BASE, BASE_CHIPS, STATE_GB),
+           dse.Workload("qwen2_72b", "train_4k",
+                        {k: v * 3 for k, v in BASE.items()}, BASE_CHIPS, 2.0)]
+    cons = dse.Constraint(max_power_w=50_000)
+    fronts = dse.pareto_search(wls, batch, cons)
+    assert set(fronts) == {("qwen3_14b", "train_4k"), ("qwen2_72b", "train_4k")}
+    for front in fronts.values():
+        assert len(front) >= 1
+        e, l = front.energy_j, front.latency_s
+        for i in range(len(front)):
+            for j in range(len(front)):
+                if i != j:
+                    assert not _dominates(e[j], l[j], e[i], l[i]), (i, j)
+
+
+def test_pareto_frontier_beats_all_feasible_points():
+    """Every feasible non-frontier point is dominated by some frontier point."""
+    batch = dse.default_space_batch(freq_points=4)
+    wl = dse.Workload("qwen3_14b", "train_4k", BASE, BASE_CHIPS, STATE_GB)
+    cons = dse.Constraint(max_power_w=50_000)
+    front = dse.pareto_search(wl, batch, cons)[("qwen3_14b", "train_4k")]
+    sim = dse.evaluate_space(BASE, BASE_CHIPS, batch)
+    feasible = dse.feasibility_mask(batch, sim, cons, STATE_GB, BASE_CHIPS)
+    on_front = set(front.indices.tolist())
+    for i in np.flatnonzero(feasible):
+        if i in on_front:
+            continue
+        assert any(_dominates(front.energy_j[j], front.latency_s[j],
+                              sim.energy_j[i], sim.latency_s[i])
+                   for j in range(len(front))), i
+
+
+def test_constraint_masks_respected():
+    batch = dse.default_space_batch(freq_points=4)
+    sim = dse.evaluate_space(BASE, BASE_CHIPS, batch)
+    cons = dse.Constraint(max_power_w=20_000, max_latency_s=1.0,
+                          min_hbm_fit=True)
+    ok = dse.feasibility_mask(batch, sim, cons, STATE_GB, BASE_CHIPS)
+    slice_power = np.asarray(sim.power_w) * batch.n_chips
+    state_bytes = STATE_GB * BASE_CHIPS / batch.n_chips * 1e9
+    hbm = CHIP_TABLE.hbm_bytes[batch.chip_idx]
+    for i in range(len(batch)):
+        expect = (slice_power[i] <= 20_000
+                  and sim.latency_s[i] <= 1.0
+                  and state_bytes[i] <= hbm[i] * 0.9)
+        assert bool(ok[i]) == expect, batch.candidates[i]
+    # frontier members must all be feasible
+    wl = dse.Workload("qwen3_14b", "train_4k", BASE, BASE_CHIPS, STATE_GB)
+    front = dse.pareto_search(wl, batch, cons)[("qwen3_14b", "train_4k")]
+    assert all(ok[i] for i in front.indices)
+    assert front.feasible_count == int(ok.sum())
+
+
+# --- supporting contracts -----------------------------------------------------
+
+
+def test_candidate_batch_roundtrip():
+    space = dse.default_space(freq_points=3)
+    batch = dse.CandidateBatch.from_candidates(space)
+    assert len(batch) == len(space)
+    for i, c in enumerate(space):
+        assert batch[i] == c
+        assert CHIP_TABLE.names[batch.chip_idx[i]] == c.chip
+        assert batch.n_chips[i] == c.n_chips
+        assert batch.freq_mhz[i] == c.freq_mhz
+
+
+def test_chip_table_consistent_with_registry():
+    for name, spec in CHIPS.items():
+        i = chip_index(name)
+        assert CHIP_TABLE.names[i] == name
+        assert CHIP_TABLE.peak_flops_bf16[i] == spec.peak_flops_bf16
+        assert CHIP_TABLE.hbm_bytes[i] == spec.hbm_bytes
+        assert CHIP_TABLE.tdp_watts[i] == spec.tdp_watts
+
+
+def test_simulate_batch_jit_close_to_numpy():
+    batch = dse.default_space_batch(freq_points=3)
+    ana = dse._scale_analysis_batch(BASE, BASE_CHIPS, batch.n_chips)
+    ref = costmodel.simulate_batch(ana, batch.chip_idx, batch.n_chips,
+                                   batch.freq_mhz)
+    jit = costmodel.simulate_batch_jit(ana, batch.chip_idx,
+                                       batch.n_chips.astype(np.float32),
+                                       batch.freq_mhz)
+    np.testing.assert_allclose(np.asarray(jit.latency_s),
+                               np.asarray(ref.latency_s), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(jit.power_w),
+                               np.asarray(ref.power_w), rtol=1e-5)
+
+
+def test_offload_sweep_matches_analyze():
+    local = {"flops": 2e12, "hbm_bytes": 2e10, "collective_bytes": 0.0,
+             "wire_bytes": 0.0}
+    remote = {"flops": 1.2e11, "hbm_bytes": 1.5e9, "collective_bytes": 2e7,
+              "wire_bytes": 2e7}
+    bws = np.array([1e6, 5e7, 1e9])
+    sweep = offload.sweep_bandwidth(local, remote, 1.2e7, 3.2e4, bws)
+    for i, bw in enumerate(bws):
+        ref = offload.analyze(local, remote, 1.2e7, 3.2e4,
+                              offload.NetworkSpec(bandwidth_bps=bw))
+        for f in ("local_latency_s", "remote_latency_s", "local_energy_j",
+                  "remote_edge_energy_j", "remote_total_energy_j"):
+            assert _rel(float(sweep[f][i]), getattr(ref, f)) <= 1e-9, f
+        assert bool(sweep["choose_remote_latency"][i]) == ref.choose_remote_latency
+        assert bool(sweep["choose_remote_battery"][i]) == ref.choose_remote_battery
