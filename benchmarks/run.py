@@ -25,6 +25,7 @@ MODULES = [
     ("perf", "benchmarks.perf_prediction"),       # paper Fig. 3
     ("hxa", "benchmarks.hxa_accuracy"),           # HyPA table
     ("dse", "benchmarks.dse_speedup"),            # DSE motivation
+    ("campaign", "benchmarks.dse_campaign"),      # streaming mega-space sweep
     ("offload", "benchmarks.offload_analysis"),   # paper §IV
     ("roofline", "benchmarks.roofline_table"),    # §Roofline generator
     ("kernels", "benchmarks.kernel_bench"),       # Pallas kernels

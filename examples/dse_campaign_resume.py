@@ -1,0 +1,65 @@
+"""Resumable DSE campaigns: interrupt a mega-space sweep, resume, same answer.
+
+A campaign streams the design space in fixed-size tiles and checkpoints its
+state (frontiers + next tile) after every tile, so a preempted sweep —
+spot-VM eviction, CI timeout, ctrl-C — continues from where it stopped
+instead of restarting.  This demo runs a campaign over all cached dry-run
+workloads, kills it mid-sweep, resumes from the checkpoint, and shows the
+final frontier is IDENTICAL to an uninterrupted fresh run.
+
+  PYTHONPATH=src python examples/dse_campaign_resume.py
+"""
+
+import os
+import tempfile
+
+from repro.core import dse
+from repro.dse_campaign import (Campaign, frontiers_identical,
+                                tiny_campaign_space)
+
+ART = os.path.join(os.getcwd(), "experiments", "dryrun")
+
+
+if __name__ == "__main__":
+    spec = tiny_campaign_space(chunk_size=128)
+    cons = dse.Constraint(max_power_w=40_000, min_hbm_fit=False)
+    ckpt = os.path.join(tempfile.mkdtemp(prefix="dse_campaign_"), "ckpt.json")
+
+    campaign = Campaign.from_artifacts(ART, spec, constraint=cons)
+    n_tiles = spec.n_tiles()
+    cut = n_tiles // 2
+    print(f"space: {len(spec)} candidates in {n_tiles} tiles of "
+          f"{spec.chunk_size}; workloads: "
+          f"{[f'{w.arch} x {w.shape}' for w in campaign.workloads]}")
+
+    partial = campaign.run(checkpoint_path=ckpt, max_tiles=cut)
+    print(f"\n-- interrupted after tile {partial.tiles_done - 1} "
+          f"({partial.tiles_done}/{n_tiles} tiles, "
+          f"{partial.candidates_evaluated} evaluations) --")
+    print(f"checkpoint: {ckpt} ({os.path.getsize(ckpt)} bytes)")
+
+    resumed = Campaign.from_checkpoint(ckpt)
+    print(f"resumed at tile {resumed.next_tile}")
+    final = resumed.run(checkpoint_path=ckpt)
+    assert final.complete
+
+    fresh = Campaign.from_artifacts(ART, spec, constraint=cons).run()
+    identical = all(frontiers_identical(final.frontiers[k], fresh.frontiers[k])
+                    for k in fresh.frontiers)
+    print(f"\nresumed final frontier == uninterrupted fresh run: {identical}")
+    assert identical, "resume diverged from fresh run"
+
+    key = sorted(fresh.frontiers)[0]
+    front = final.frontiers[key]
+    print(f"\n{key[0]} x {key[1]} energy/latency frontier "
+          f"({len(front)} points, {front.feasible_count} feasible; "
+          "first 10 by latency):")
+    for cand, e, lat in list(zip(front.candidates, front.energy_j,
+                                 front.latency_s))[:10]:
+        mesh = "x".join(map(str, cand.mesh))
+        print(f"  {cand.chip:>8} x{cand.n_chips:<4} mesh {mesh:>8} @ "
+              f"{cand.freq_mhz:7.1f} MHz   {lat * 1e3:9.2f} ms   "
+              f"{e / 1e3:9.2f} kJ")
+    traj = final.trajectories[key]
+    print(f"\ntrajectory: {len(traj)} snapshots; frontier growth "
+          f"{[s.frontier_size for s in traj[:: max(len(traj) // 8, 1)]]}")

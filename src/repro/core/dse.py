@@ -231,6 +231,41 @@ def evaluate_space(base_analysis: Dict, base_chips: int, batch: CandidateBatch,
                                     gathered=batch.chip_cols)
 
 
+def evaluate_workload_tile(workload: "Workload", batch: CandidateBatch,
+                           constraint: "Constraint" = None,
+                           sim: costmodel.SimConfig = costmodel.SimConfig(),
+                           engine: str = "numpy"
+                           ) -> Tuple[costmodel.SimBatch, np.ndarray]:
+    """Evaluate one candidate tile for one workload: (SimBatch, feasible).
+
+    The tile-friendly composition of ``evaluate_space`` + ``feasibility_mask``
+    that streaming campaigns (``repro.dse_campaign``) call per chunk —
+    evaluating a space tile by tile through this function is exactly
+    equivalent to one big ``evaluate_space`` call on the concatenated batch.
+    ``engine="jit"`` routes the simulate through ``simulate_batch_jit``
+    (float32 on the default config; use the numpy engine when bitwise
+    agreement with ``pareto_search`` matters).
+    """
+    if constraint is None:
+        constraint = Constraint()
+    if engine not in ("numpy", "jit"):
+        raise ValueError(f"unknown engine {engine!r}; expected 'numpy' or "
+                         "'jit' (the predictor fast path lives in "
+                         "Campaign(evaluator='fast'))")
+    if engine == "jit":
+        ana = _scale_analysis_batch(workload.base_analysis, workload.base_chips,
+                                    batch.n_chips)
+        res = costmodel.simulate_batch_jit(ana, batch.chip_idx, batch.n_chips,
+                                           batch.freq_mhz, sim=sim)
+    else:
+        res = evaluate_space(workload.base_analysis, workload.base_chips,
+                             batch, sim=sim)
+    feasible = feasibility_mask(batch, res, constraint,
+                                workload.state_gb_per_device,
+                                workload.base_chips)
+    return res, feasible
+
+
 def slow_path_search(arch: str, shape_name: str, base_analysis: Dict,
                      base_chips: int, state_gb_per_device: float,
                      space: SpaceLike,
@@ -282,6 +317,35 @@ def slow_path_search_scalar(arch: str, shape_name: str, base_analysis: Dict,
     return best, results, time.perf_counter() - t0
 
 
+def predict_space(cfg, shape, power_model, cycles_model, batch: CandidateBatch,
+                  constraint: Constraint = Constraint()
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                             np.ndarray, np.ndarray]:
+    """The fast path's shared scoring core: predictor-based
+    (energy_j, latency_s, feasible, power_w_per_chip, cycles) for a batch.
+
+    Single home for the prediction arithmetic and constraint masks so
+    ``fast_path_search`` and campaign fast-path tiles cannot diverge.
+    """
+    X = features.extract_batch(cfg, shape, batch.chip_idx, batch.n_chips,
+                               batch.mesh_data, batch.mesh_model,
+                               batch.freq_mhz)
+    p_watts = np.asarray(power_model.predict(X))     # per chip
+    p_cycles = np.asarray(cycles_model.predict(X))
+    n = batch.n_chips.astype(np.float64)
+    lat = p_cycles / (batch.freq_mhz * 1e6)
+    energy = p_watts * n * lat
+    feasible = np.ones(len(batch), bool)
+    if constraint.max_power_w is not None:
+        feasible &= (p_watts * n) <= constraint.max_power_w
+    if constraint.max_latency_s is not None:
+        feasible &= lat <= constraint.max_latency_s
+    if constraint.min_hbm_fit:
+        need = cfg.param_count() * 2 * (3.0 if shape.kind == "train" else 1.0)
+        feasible &= need / n <= batch.hbm_bytes() * 0.9
+    return energy, lat, feasible, p_watts, p_cycles
+
+
 def fast_path_search(arch: str, shape_name: str, power_model, cycles_model,
                      space: SpaceLike,
                      constraint: Constraint = Constraint(),
@@ -298,23 +362,8 @@ def fast_path_search(arch: str, shape_name: str, power_model, cycles_model,
     shape = SHAPES[shape_name]
     t0 = time.perf_counter()
     batch = as_batch(space)
-    X = features.extract_batch(cfg, shape, batch.chip_idx, batch.n_chips,
-                               batch.mesh_data, batch.mesh_model,
-                               batch.freq_mhz)
-    p_watts = power_model.predict(X)                 # per chip
-    p_cycles = cycles_model.predict(X)
-    freqs = batch.freq_mhz * 1e6
-    n = batch.n_chips.astype(np.float64)
-    lat = p_cycles / freqs
-    energy = p_watts * n * lat
-    feasible = np.ones(len(batch), bool)
-    if constraint.max_power_w is not None:
-        feasible &= (p_watts * n) <= constraint.max_power_w
-    if constraint.max_latency_s is not None:
-        feasible &= lat <= constraint.max_latency_s
-    if constraint.min_hbm_fit:
-        need = cfg.param_count() * 2 * (3.0 if shape.kind == "train" else 1.0)
-        feasible &= need / n <= batch.hbm_bytes() * 0.9
+    energy, lat, feasible, p_watts, p_cycles = predict_space(
+        cfg, shape, power_model, cycles_model, batch, constraint)
     score = energy if objective == "energy" else lat
     score = np.where(feasible, score, np.inf)
     order = np.argsort(score)

@@ -1,0 +1,29 @@
+"""Streaming DSE campaigns: generator-backed mega-spaces, incremental Pareto
+frontiers, resumable orchestration, persisted trajectory artifacts.
+
+The layer between the batch primitives (``repro.core.dse`` /
+``repro.core.costmodel``) and the report scripts: a ``SpaceSpec`` describes a
+100-1000x larger space than ``dse.default_space`` without materializing it, a
+``Campaign`` streams it tile-by-tile over every cached workload with
+checkpoint/resume, and each workload's ``StreamingFrontier`` maintains a
+skyline provably identical to one-shot ``dse.pareto_search``.
+"""
+
+from repro.dse_campaign.frontier import (FrontierSnapshot, StreamingFrontier,
+                                         candidate_from_dict,
+                                         candidate_to_dict,
+                                         canonical_frontier,
+                                         frontiers_identical)
+from repro.dse_campaign.runner import Campaign, CampaignResult, TileStat
+from repro.dse_campaign.space import (DEFAULT_VARIANTS, SliceVariant,
+                                      SpaceSpec, default_campaign_space,
+                                      tiny_campaign_space)
+from repro.dse_campaign import store
+
+__all__ = [
+    "Campaign", "CampaignResult", "DEFAULT_VARIANTS", "FrontierSnapshot",
+    "SliceVariant", "SpaceSpec", "StreamingFrontier", "TileStat",
+    "candidate_from_dict", "candidate_to_dict", "canonical_frontier",
+    "default_campaign_space", "frontiers_identical", "store",
+    "tiny_campaign_space",
+]

@@ -1,0 +1,246 @@
+"""Incremental energy/latency Pareto frontiers for streaming campaigns.
+
+``dse.pareto_search`` computes a frontier in one shot over a fully
+materialized space.  ``StreamingFrontier`` maintains the same frontier
+incrementally: each evaluated tile is merged into the running skyline via
+``dse.pareto_mask`` on (current frontier) u (new feasible points).  Because
+Pareto(Pareto(A) u B) == Pareto(A u B) — dominance is transitive, and the
+repo's duplicate semantics (equal points never dominate each other) carry
+through the union — the streamed result is *identical* to the one-shot
+frontier on the concatenated space, while resident state stays
+O(frontier + tile) instead of O(space).
+
+Merges are idempotent and commutative: points are identified by their global
+candidate index (re-merging an already-seen index is a no-op), and the final
+frontier set does not depend on tile order.  Every merge appends a
+``FrontierSnapshot`` to the trajectory — frontier size, a hypervolume proxy,
+and the best-per-constraint extremes — which campaigns persist for
+cross-PR regression tracking.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import dse
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontierSnapshot:
+    """Trajectory point recorded after one merge."""
+
+    tile: int
+    evaluated: int               # cumulative candidates evaluated
+    feasible: int                # cumulative feasible candidates seen
+    frontier_size: int
+    best_energy_j: float         # best-per-constraint extremes
+    best_latency_s: float
+    hypervolume: float           # proxy vs the frontier's fixed ref point
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class StreamingFrontier:
+    """Running energy/latency skyline over a streamed candidate space.
+
+    The reference point for the hypervolume proxy is pinned at the first
+    merge that contains feasible points (max energy/latency of that merge),
+    so trajectory values are comparable across snapshots — and across a
+    checkpoint/resume boundary, since the ref point rides in ``state_dict``.
+    """
+
+    def __init__(self, ref_energy_j: Optional[float] = None,
+                 ref_latency_s: Optional[float] = None):
+        self.candidates: List[dse.Candidate] = []
+        self.energy_j = np.empty(0, np.float64)
+        self.latency_s = np.empty(0, np.float64)
+        self.indices = np.empty(0, np.int64)     # global candidate indices
+        self.evaluated = 0
+        self.feasible_seen = 0
+        self.ref_energy_j = ref_energy_j
+        self.ref_latency_s = ref_latency_s
+        self.trajectory: List[FrontierSnapshot] = []
+        # seen global indices as merged [start, end) intervals — O(intervals)
+        # not O(space), and a contiguous tile stream is ONE growing interval
+        self._seen: List[Tuple[int, int]] = []
+
+    def __len__(self) -> int:
+        return len(self.candidates)
+
+    def _claim_novel(self, indices: np.ndarray) -> np.ndarray:
+        """Mask of indices not seen by any earlier merge; marks them seen.
+
+        Keeps ``evaluated``/``feasible_seen`` exact under re-merged tiles
+        (idempotence covers the accounting, not just the frontier set).
+        """
+        if not self._seen:
+            novel = np.ones(indices.shape, bool)
+        else:
+            starts = np.asarray([s for s, _ in self._seen], np.int64)
+            ends = np.asarray([e for _, e in self._seen], np.int64)
+            pos = np.searchsorted(starts, indices, side="right") - 1
+            novel = ~((pos >= 0) & (indices < ends[np.maximum(pos, 0)]))
+        new_idx = np.unique(indices[novel])
+        if new_idx.size:
+            brk = np.flatnonzero(np.diff(new_idx) > 1)
+            new_starts = new_idx[np.concatenate([[0], brk + 1])]
+            new_ends = new_idx[np.concatenate([brk, [new_idx.size - 1]])] + 1
+            merged: List[Tuple[int, int]] = []
+            for s, e in sorted(self._seen + list(zip(new_starts.tolist(),
+                                                     new_ends.tolist()))):
+                if merged and s <= merged[-1][1]:
+                    merged[-1] = (merged[-1][0], max(merged[-1][1], e))
+                else:
+                    merged.append((s, e))
+            self._seen = merged
+        return novel
+
+    def merge(self, candidates: Sequence[dse.Candidate], energy_j, latency_s,
+              feasible=None, indices=None, tile: int = -1) -> int:
+        """Fold one evaluated tile into the skyline; returns the new size.
+
+        ``indices`` are the candidates' global positions in the space (used
+        for idempotent dedup and for reporting); when omitted they are
+        assigned sequentially from the running ``evaluated`` counter.
+        Re-merging already-seen indices is a full no-op: neither the frontier
+        set nor the evaluated/feasible accounting changes.
+        """
+        energy_j = np.asarray(energy_j, np.float64)
+        latency_s = np.asarray(latency_s, np.float64)
+        n = len(candidates)
+        if energy_j.shape != (n,) or latency_s.shape != (n,):
+            raise ValueError(f"shape mismatch: {n} candidates vs "
+                             f"{energy_j.shape}/{latency_s.shape} scores")
+        feasible = (np.ones(n, bool) if feasible is None
+                    else np.asarray(feasible, bool))
+        indices = (np.arange(self.evaluated, self.evaluated + n, dtype=np.int64)
+                   if indices is None else np.asarray(indices, np.int64))
+        novel = self._claim_novel(indices)
+        self.evaluated += int(novel.sum())
+        keep = np.flatnonzero(feasible & novel)
+        self.feasible_seen += int(keep.size)
+
+        if self.ref_energy_j is None and keep.size:
+            self.ref_energy_j = float(energy_j[keep].max())
+            self.ref_latency_s = float(latency_s[keep].max())
+
+        if keep.size:
+            # union: current frontier first so dedup-by-index keeps it
+            all_cands = self.candidates + [candidates[i] for i in keep]
+            all_e = np.concatenate([self.energy_j, energy_j[keep]])
+            all_l = np.concatenate([self.latency_s, latency_s[keep]])
+            all_i = np.concatenate([self.indices, indices[keep]])
+            _, first = np.unique(all_i, return_index=True)
+            first.sort()
+            all_e, all_l, all_i = all_e[first], all_l[first], all_i[first]
+            all_cands = [all_cands[i] for i in first]
+            mask = dse.pareto_mask(all_e, all_l, np.ones(len(all_i), bool))
+            sel = np.flatnonzero(mask)
+            # canonical order: latency, then energy, then global index —
+            # identical regardless of the merge order that produced the set
+            order = sel[np.lexsort((all_i[sel], all_e[sel], all_l[sel]))]
+            self.candidates = [all_cands[i] for i in order]
+            self.energy_j = all_e[order]
+            self.latency_s = all_l[order]
+            self.indices = all_i[order]
+
+        self.trajectory.append(FrontierSnapshot(
+            tile=tile, evaluated=self.evaluated, feasible=self.feasible_seen,
+            frontier_size=len(self),
+            best_energy_j=float(self.energy_j.min()) if len(self) else float("inf"),
+            best_latency_s=float(self.latency_s.min()) if len(self) else float("inf"),
+            hypervolume=self.hypervolume()))
+        return len(self)
+
+    def hypervolume(self) -> float:
+        """Area dominated by the frontier up to the fixed reference point.
+
+        Exact for the 2D minimization given the ref point; a *proxy* overall
+        because the ref point is pinned from early data rather than the true
+        nadir.  Points outside the ref box contribute zero.
+        """
+        if not len(self) or self.ref_energy_j is None:
+            return 0.0
+        e, l = self.energy_j, self.latency_s
+        inside = (e < self.ref_energy_j) & (l < self.ref_latency_s)
+        if not inside.any():
+            return 0.0
+        e, l = e[inside], l[inside]
+        order = np.lexsort((e, l))             # latency asc (energy desc)
+        e, l = e[order], l[order]
+        right = np.append(l[1:], self.ref_latency_s)
+        return float(np.sum((self.ref_energy_j - e) * (right - l)))
+
+    def as_pareto_frontier(self, workload: dse.Workload) -> dse.ParetoFrontier:
+        """The running skyline in ``dse.ParetoFrontier`` form (sorted by
+        latency, like ``pareto_search`` output)."""
+        return dse.ParetoFrontier(
+            workload=workload,
+            candidates=tuple(self.candidates),
+            energy_j=self.energy_j.copy(),
+            latency_s=self.latency_s.copy(),
+            indices=self.indices.copy(),
+            feasible_count=self.feasible_seen)
+
+    # -- persistence --------------------------------------------------------
+
+    def state_dict(self) -> Dict:
+        return {
+            "candidates": [candidate_to_dict(c) for c in self.candidates],
+            "energy_j": self.energy_j.tolist(),
+            "latency_s": self.latency_s.tolist(),
+            "indices": self.indices.tolist(),
+            "evaluated": self.evaluated,
+            "feasible_seen": self.feasible_seen,
+            "ref_energy_j": self.ref_energy_j,
+            "ref_latency_s": self.ref_latency_s,
+            "seen_intervals": [list(iv) for iv in self._seen],
+            "trajectory": [s.as_dict() for s in self.trajectory],
+        }
+
+    @classmethod
+    def from_state(cls, state: Dict) -> "StreamingFrontier":
+        fr = cls(ref_energy_j=state["ref_energy_j"],
+                 ref_latency_s=state["ref_latency_s"])
+        fr.candidates = [candidate_from_dict(d) for d in state["candidates"]]
+        fr.energy_j = np.asarray(state["energy_j"], np.float64)
+        fr.latency_s = np.asarray(state["latency_s"], np.float64)
+        fr.indices = np.asarray(state["indices"], np.int64)
+        fr.evaluated = state["evaluated"]
+        fr.feasible_seen = state["feasible_seen"]
+        fr._seen = [(int(s), int(e)) for s, e in state["seen_intervals"]]
+        fr.trajectory = [FrontierSnapshot(**s) for s in state["trajectory"]]
+        return fr
+
+
+def canonical_frontier(front: dse.ParetoFrontier):
+    """(candidates, energy, latency, indices) in the canonical
+    (latency, energy, index) order — the one total order both streamed and
+    one-shot frontiers can be compared under."""
+    order = np.lexsort((front.indices, front.energy_j, front.latency_s))
+    return ([front.candidates[i] for i in order], front.energy_j[order],
+            front.latency_s[order], front.indices[order])
+
+
+def frontiers_identical(a: dse.ParetoFrontier, b: dse.ParetoFrontier) -> bool:
+    """Exact (bitwise) frontier equality under the canonical order — the
+    single definition the benchmark gate, the resume example, and the tests
+    all compare with."""
+    ca, ea, la, ia = canonical_frontier(a)
+    cb, eb, lb, ib = canonical_frontier(b)
+    return (ca == cb and np.array_equal(ea, eb) and np.array_equal(la, lb)
+            and np.array_equal(ia, ib))
+
+
+def candidate_to_dict(c: dse.Candidate) -> Dict:
+    return {"chip": c.chip, "n_chips": int(c.n_chips),
+            "mesh": list(c.mesh), "freq_mhz": float(c.freq_mhz)}
+
+
+def candidate_from_dict(d: Dict) -> dse.Candidate:
+    return dse.Candidate(d["chip"], d["n_chips"], tuple(d["mesh"]),
+                         d["freq_mhz"])

@@ -1,0 +1,257 @@
+"""Campaign orchestrator: resumable, bounded-memory DSE over mega-spaces.
+
+A ``Campaign`` sweeps every workload in a cached dry-run artifact set across
+a ``SpaceSpec``, tile by tile: each ``chunk_size`` tile is materialized,
+evaluated for all workloads (``dse.evaluate_workload_tile`` — the numpy
+simulator, its jitted variant, or the trained fast-path predictors), masked
+by the ``Constraint``, folded into each workload's ``StreamingFrontier``,
+and released.  Peak candidate memory is one tile regardless of space size.
+
+Checkpointing is by tile index: the campaign state (spec, workloads,
+frontiers, trajectory, next tile) round-trips through JSON, so an
+interrupted sweep resumes exactly where it stopped and converges to the
+same frontier a fresh run produces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import SHAPES, get_config
+from repro.core import costmodel, dataset, dse
+from repro.dse_campaign import store
+from repro.dse_campaign.frontier import StreamingFrontier
+from repro.dse_campaign.space import SpaceSpec
+
+WorkloadKey = Tuple[str, str]
+
+
+@dataclasses.dataclass
+class TileStat:
+    """Wall-clock accounting for one evaluated tile (all workloads)."""
+
+    tile: int
+    candidates: int
+    wall_s: float
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    """Final (or interrupted) campaign state returned by ``Campaign.run``."""
+
+    frontiers: Dict[WorkloadKey, dse.ParetoFrontier]
+    trajectories: Dict[WorkloadKey, List]
+    tile_stats: List[TileStat]
+    space_size: int
+    tiles_done: int
+    n_tiles: int
+    wall_s: float
+
+    @property
+    def complete(self) -> bool:
+        return self.tiles_done >= self.n_tiles
+
+    @property
+    def candidates_evaluated(self) -> int:
+        return sum(s.candidates for s in self.tile_stats)
+
+    @property
+    def sweep_wall_s(self) -> float:
+        """Total tile-evaluation wall across ALL runs of this campaign —
+        ``tile_stats`` survives checkpoint/resume, so unlike ``wall_s`` (this
+        ``run`` call only) it stays consistent with ``candidates_evaluated``
+        on a resumed campaign."""
+        return sum(s.wall_s for s in self.tile_stats)
+
+    @property
+    def candidates_per_sec(self) -> float:
+        """Per-workload candidate evaluations per second of sweep wall."""
+        return self.candidates_evaluated / max(self.sweep_wall_s, 1e-9)
+
+
+class Campaign:
+    """Streaming multi-workload DSE campaign over a ``SpaceSpec``.
+
+    ``evaluator`` selects the tile engine: ``"numpy"`` (float64 simulator,
+    bitwise-identical to one-shot ``pareto_search``), ``"jit"``
+    (``simulate_batch_jit``), or ``"fast"`` (trained predictors; pass
+    fitted ``power_model``/``cycles_model``).
+    """
+
+    def __init__(self, workloads: Sequence[dse.Workload], space: SpaceSpec,
+                 constraint: dse.Constraint = None,
+                 evaluator: str = "numpy",
+                 sim: costmodel.SimConfig = costmodel.SimConfig(),
+                 power_model=None, cycles_model=None,
+                 checkpoint_every: int = 1):
+        if evaluator not in ("numpy", "jit", "fast"):
+            raise ValueError(f"unknown evaluator {evaluator!r}")
+        if evaluator == "fast" and (power_model is None or cycles_model is None):
+            raise ValueError("evaluator='fast' needs fitted power_model and "
+                             "cycles_model")
+        keys = [(wl.arch, wl.shape) for wl in workloads]
+        if len(set(keys)) != len(keys):
+            raise ValueError(f"duplicate (arch, shape) workload keys: {keys}")
+        self.workloads = list(workloads)
+        self.space = space
+        self.constraint = constraint if constraint is not None else dse.Constraint()
+        self.evaluator = evaluator
+        self.sim = sim
+        self.power_model = power_model
+        self.cycles_model = cycles_model
+        self.checkpoint_every = max(int(checkpoint_every), 1)
+        self.frontiers: Dict[WorkloadKey, StreamingFrontier] = {
+            k: StreamingFrontier() for k in keys}
+        self.tile_stats: List[TileStat] = []
+        self.next_tile = 0
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_artifacts(cls, art_dir: str, space: SpaceSpec,
+                       **kwargs) -> "Campaign":
+        """Sweep ALL cached dry-run workloads under ``art_dir``.
+
+        Each artifact's compiled census (``base_analysis``) is loaded ONCE
+        per (arch, shape) cell and reused across every tile of the sweep.
+        Colliding (arch, shape) cells from different pods are disambiguated
+        by suffixing the shape with the pod tag.
+        """
+        arts = dataset.load_dryrun_artifacts(art_dir)
+        if not arts:
+            raise FileNotFoundError(f"no dry-run artifacts in {art_dir}")
+        seen = {}
+        for (arch, shape, pod), art in sorted(arts.items()):
+            key = (arch, shape) if (arch, shape) not in seen else (
+                arch, f"{shape}:{pod}")
+            seen[key] = dse.Workload(
+                arch=key[0], shape=key[1],
+                base_analysis={k: art["hxa"][k] for k in
+                               ("flops", "hbm_bytes", "collective_bytes",
+                                "wire_bytes")},
+                base_chips=art["roofline"]["n_chips"],
+                state_gb_per_device=art["memory"]["state_gb_per_device"])
+        return cls(list(seen.values()), space, **kwargs)
+
+    @classmethod
+    def from_checkpoint(cls, path: str, **kwargs) -> "Campaign":
+        """Rebuild an interrupted campaign from its checkpoint file; the
+        next ``run`` continues at the first unevaluated tile.
+
+        Space, workloads, constraint, ``SimConfig`` and evaluator are all
+        restored from the checkpoint.  Fitted predictor models cannot be
+        serialized, so resuming an ``evaluator="fast"`` campaign requires
+        re-passing the SAME ``power_model``/``cycles_model`` via kwargs
+        (``__init__`` refuses to resume without them); supplying retrained
+        models would splice two predictors into one frontier undetected.
+        """
+        state = store.load_checkpoint(path)
+        workloads = [dse.Workload(arch=w["arch"], shape=w["shape"],
+                                  base_analysis=w["base_analysis"],
+                                  base_chips=w["base_chips"],
+                                  state_gb_per_device=w["state_gb_per_device"])
+                     for w in state["workloads"]]
+        cons = dse.Constraint(**state["constraint"])
+        kwargs.setdefault("sim", costmodel.SimConfig(**state["sim"]))
+        camp = cls(workloads, SpaceSpec.from_dict(state["space"]),
+                   constraint=cons, evaluator=state["evaluator"], **kwargs)
+        camp.next_tile = state["next_tile"]
+        camp.tile_stats = [TileStat(**s) for s in state["tile_stats"]]
+        for key_str, fr_state in state["frontiers"].items():
+            arch, shape = key_str.split("|", 1)
+            camp.frontiers[(arch, shape)] = StreamingFrontier.from_state(fr_state)
+        return camp
+
+    # -- evaluation ---------------------------------------------------------
+
+    def _evaluate_tile(self, wl: dse.Workload, batch: dse.CandidateBatch
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(energy_j, latency_s, feasible) for one workload on one tile."""
+        if self.evaluator == "fast":
+            return self._evaluate_tile_fast(wl, batch)
+        res, feasible = dse.evaluate_workload_tile(
+            wl, batch, self.constraint, sim=self.sim, engine=self.evaluator)
+        return np.asarray(res.energy_j), np.asarray(res.latency_s), feasible
+
+    def _evaluate_tile_fast(self, wl: dse.Workload, batch: dse.CandidateBatch):
+        """Predictor fast path via ``dse.predict_space`` (same scoring as
+        ``fast_path_search``).  Workload shapes suffixed with a pod tag
+        resolve to their base shape."""
+        cfg = get_config(wl.arch)
+        shape = SHAPES[wl.shape.split(":", 1)[0]]
+        energy, latency, feasible, _, _ = dse.predict_space(
+            cfg, shape, self.power_model, self.cycles_model, batch,
+            self.constraint)
+        return energy, latency, feasible
+
+    # -- the sweep ----------------------------------------------------------
+
+    def run(self, checkpoint_path: Optional[str] = None,
+            max_tiles: Optional[int] = None) -> CampaignResult:
+        """Sweep tiles from ``next_tile`` on; returns the (possibly partial)
+        campaign result.  ``max_tiles`` bounds THIS call (interruption point
+        for resume demos/tests); with a ``checkpoint_path`` the state is
+        persisted every ``checkpoint_every`` tiles and at the end."""
+        t_start = time.perf_counter()
+        done_this_call = 0
+        for tile_no, lo, batch in self.space.tiles(start_tile=self.next_tile):
+            if max_tiles is not None and done_this_call >= max_tiles:
+                break
+            t0 = time.perf_counter()
+            indices = np.arange(lo, lo + len(batch), dtype=np.int64)
+            for wl in self.workloads:
+                energy, latency, feasible = self._evaluate_tile(wl, batch)
+                self.frontiers[(wl.arch, wl.shape)].merge(
+                    batch.candidates, energy, latency, feasible,
+                    indices=indices, tile=tile_no)
+            self.tile_stats.append(TileStat(
+                tile=tile_no, candidates=len(batch) * len(self.workloads),
+                wall_s=time.perf_counter() - t0))
+            self.next_tile = tile_no + 1
+            done_this_call += 1
+            if checkpoint_path and (self.next_tile % self.checkpoint_every == 0):
+                store.save_checkpoint(self.state_dict(), checkpoint_path)
+        if checkpoint_path:
+            store.save_checkpoint(self.state_dict(), checkpoint_path)
+        return self._result(time.perf_counter() - t_start)
+
+    def _result(self, wall_s: float) -> CampaignResult:
+        wl_by_key = {(wl.arch, wl.shape): wl for wl in self.workloads}
+        return CampaignResult(
+            frontiers={k: fr.as_pareto_frontier(wl_by_key[k])
+                       for k, fr in self.frontiers.items()},
+            trajectories={k: list(fr.trajectory)
+                          for k, fr in self.frontiers.items()},
+            tile_stats=list(self.tile_stats),
+            space_size=len(self.space),
+            tiles_done=self.next_tile,
+            n_tiles=self.space.n_tiles(),
+            wall_s=wall_s)
+
+    # -- persistence --------------------------------------------------------
+
+    def state_dict(self) -> Dict:
+        return {
+            "version": 1,
+            "space": self.space.to_dict(),
+            "workloads": [{
+                "arch": wl.arch, "shape": wl.shape,
+                "base_analysis": dict(wl.base_analysis),
+                "base_chips": wl.base_chips,
+                "state_gb_per_device": wl.state_gb_per_device,
+            } for wl in self.workloads],
+            "constraint": dataclasses.asdict(self.constraint),
+            "sim": dataclasses.asdict(self.sim),
+            "evaluator": self.evaluator,
+            "next_tile": self.next_tile,
+            "tile_stats": [s.as_dict() for s in self.tile_stats],
+            "frontiers": {f"{arch}|{shape}": fr.state_dict()
+                          for (arch, shape), fr in self.frontiers.items()},
+        }

@@ -1,0 +1,95 @@
+"""JSON persistence for campaigns: checkpoints + BENCH_*.json artifacts.
+
+Two artifact kinds:
+  * checkpoint — the full resumable ``Campaign.state_dict()`` (spec,
+    workloads, constraint, per-workload frontier state, next tile), written
+    atomically so an interrupt mid-write never corrupts the resume point.
+  * campaign report — the ``BENCH_dse_campaign.json`` shape consumed by CI:
+    frontier members + per-tile trajectory + throughput, diffable across PRs
+    the same way the other ``BENCH_*``/bench ``run.json`` artifacts are.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import platform
+from typing import Dict
+
+from repro.dse_campaign.frontier import candidate_to_dict
+
+CAMPAIGN_BENCH_NAME = "BENCH_dse_campaign.json"
+
+
+def _atomic_write_json(payload: Dict, path: str) -> str:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1)
+    os.replace(tmp, path)
+    return path
+
+
+def save_checkpoint(state: Dict, path: str) -> str:
+    """Persist a ``Campaign.state_dict()`` atomically (tmp + rename)."""
+    return _atomic_write_json(state, path)
+
+
+def load_checkpoint(path: str) -> Dict:
+    with open(path) as f:
+        state = json.load(f)
+    version = state.get("version")
+    if version != 1:
+        raise ValueError(f"unsupported campaign checkpoint version {version!r} "
+                         f"in {path}")
+    return state
+
+
+def campaign_payload(result, space_dict: Dict, constraint: Dict,
+                     evaluator: str, seed: int = 0) -> Dict:
+    """``CampaignResult`` -> the BENCH_dse_campaign.json payload."""
+    frontiers = {}
+    for (arch, shape), front in sorted(result.frontiers.items()):
+        frontiers[f"{arch}|{shape}"] = {
+            "feasible_count": front.feasible_count,
+            "points": [{
+                **candidate_to_dict(c),
+                "energy_j": float(e),
+                "latency_s": float(l),
+                "index": int(i),
+            } for c, e, l, i in zip(front.candidates, front.energy_j,
+                                    front.latency_s, front.indices)],
+        }
+    trajectories = {
+        f"{arch}|{shape}": [s.as_dict() for s in snaps]
+        for (arch, shape), snaps in sorted(result.trajectories.items())}
+    return {
+        "bench": "dse_campaign",
+        "seed": seed,
+        "python": platform.python_version(),
+        "space": space_dict,
+        "constraint": constraint,
+        "evaluator": evaluator,
+        "workloads": sorted(f"{a}|{s}" for a, s in result.frontiers),
+        "tiles_done": result.tiles_done,
+        "n_tiles": result.n_tiles,
+        "complete": result.complete,
+        "throughput": {
+            "candidates_evaluated": result.candidates_evaluated,
+            "wall_s": result.sweep_wall_s,      # all runs, resume-consistent
+            "candidates_per_sec": result.candidates_per_sec,
+        },
+        "frontiers": frontiers,
+        "trajectory": trajectories,
+    }
+
+
+def save_campaign(result, space_dict: Dict, constraint: Dict, evaluator: str,
+                  out_dir: str, seed: int = 0,
+                  fname: str = CAMPAIGN_BENCH_NAME) -> str:
+    """Write the campaign report JSON; returns the path."""
+    payload = campaign_payload(result, space_dict, constraint, evaluator,
+                               seed=seed)
+    return _atomic_write_json(payload, os.path.join(out_dir, fname))

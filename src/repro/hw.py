@@ -200,8 +200,53 @@ def get_chip(name: str = DEFAULT_CHIP, freq_mhz: float | None = None) -> ChipSpe
     return spec
 
 
+def frequency_lattice(lo: float, hi: float, points: int) -> list:
+    """``points`` DVFS values in [lo, hi] with EXACT endpoints.
+
+    The naive ``lo + i*(hi-lo)/(points-1)`` formula can drift past ``hi`` by
+    an ulp at the last point (e.g. 1600.0000000000002 MHz), which made swept
+    lattices platform-dependent after clamping; the interior keeps that
+    formula (so existing sweeps are unchanged) but both endpoints are pinned
+    to the band bounds.  ``points == 1`` collapses to the nominal top of the
+    band rather than dividing by zero.
+    """
+    if points <= 1:
+        return [float(hi)]
+    vals = [lo + i * (hi - lo) / (points - 1) for i in range(points)]
+    vals[0], vals[-1] = float(lo), float(hi)
+    return vals
+
+
 def frequency_sweep(name: str = DEFAULT_CHIP, points: int = 12) -> list:
     """DVFS sweep analogous to the paper's 397-1590 MHz V100S sweep."""
     spec = CHIPS[name]
-    lo, hi = spec.min_freq_mhz, spec.max_freq_mhz
-    return [lo + i * (hi - lo) / (points - 1) for i in range(points)]
+    return frequency_lattice(spec.min_freq_mhz, spec.max_freq_mhz, points)
+
+
+def mesh_factorizations(n_chips: int, dims: int = 2) -> Tuple[Tuple[int, ...], ...]:
+    """All nondecreasing mesh factorizations of ``n_chips`` into 2 (or 3) axes.
+
+    The campaign design space sweeps every way to arrange a slice of
+    ``n_chips`` chips as a (data, model) 2D mesh — or (pod, data, model) with
+    ``dims=3`` — rather than the handful of hand-picked meshes in
+    ``dse.default_space``.  Factors are sorted nondecreasing so each physical
+    arrangement appears once; 3D meshes require a real pod dimension (leading
+    factor >= 2) since a leading-1 3D mesh is the 2D mesh already listed.
+    Results are deterministic and sorted.
+    """
+    if n_chips < 1:
+        raise ValueError(f"n_chips must be >= 1, got {n_chips}")
+    out = set()
+    for a in range(1, int(n_chips ** 0.5) + 1):
+        if n_chips % a:
+            continue
+        out.add((a, n_chips // a))
+    if dims >= 3:
+        for a in range(2, int(n_chips ** (1 / 3)) + 2):
+            if n_chips % a:
+                continue
+            rem = n_chips // a
+            for b in range(a, int(rem ** 0.5) + 1):
+                if rem % b == 0:
+                    out.add((a, b, rem // b))
+    return tuple(sorted(out, key=lambda m: (len(m), m)))

@@ -77,6 +77,26 @@ def test_slow_path_batched_matches_scalar_loop():
         assert _rel(r_new[c]["sim"].energy_j, r_old[c]["sim"].energy_j) <= 1e-6
 
 
+def test_evaluate_workload_tile_matches_evaluate_space():
+    """Tile-wise evaluation (the campaign entry point) concatenates to the
+    same SimBatch + feasibility as one evaluate_space pass."""
+    wl = dse.Workload("qwen3_14b", "train_4k", BASE, BASE_CHIPS, STATE_GB)
+    cons = dse.Constraint(max_power_w=50_000)
+    space = dse.default_space(freq_points=4)
+    full = dse.CandidateBatch.from_candidates(space)
+    ref = dse.evaluate_space(BASE, BASE_CHIPS, full)
+    ref_feas = dse.feasibility_mask(full, ref, cons, STATE_GB, BASE_CHIPS)
+    chunk = 17
+    e, l, f = [], [], []
+    for lo in range(0, len(space), chunk):
+        tile = dse.CandidateBatch.from_candidates(space[lo:lo + chunk])
+        sim, feas = dse.evaluate_workload_tile(wl, tile, cons)
+        e.append(sim.energy_j), l.append(sim.latency_s), f.append(feas)
+    np.testing.assert_array_equal(np.concatenate(e), np.asarray(ref.energy_j))
+    np.testing.assert_array_equal(np.concatenate(l), np.asarray(ref.latency_s))
+    np.testing.assert_array_equal(np.concatenate(f), ref_feas)
+
+
 # --- (b) fast-path top-1 lands in the slow-path top-k -------------------------
 
 

@@ -1,0 +1,379 @@
+"""Streaming DSE campaign tests: generator space addressing, streamed-vs-
+one-shot frontier identity, tile-boundary invariance, checkpoint/resume,
+and merge idempotence/commutativity properties."""
+
+import json
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised on bare installs
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import dse
+from repro.dse_campaign import (Campaign, SliceVariant, SpaceSpec,
+                                StreamingFrontier, canonical_frontier,
+                                default_campaign_space, frontiers_identical,
+                                store, tiny_campaign_space)
+from repro.hw import CHIPS, frequency_sweep, mesh_factorizations
+
+BASE = {"flops": 3.2e14, "hbm_bytes": 4.5e13, "collective_bytes": 5e11,
+        "wire_bytes": 7e11}
+WL = dse.Workload("qwen3_14b", "train_4k", BASE, 256, 0.5)
+CONS = dse.Constraint(max_power_w=50_000)
+
+
+def small_spec(**kw):
+    kw.setdefault("chips", ("tpu-v5e", "tpu-v4", "tpu-edge"))
+    kw.setdefault("chip_counts", (16, 64))
+    kw.setdefault("freq_points", 7)
+    kw.setdefault("variants", (SliceVariant(), SliceVariant("bin85", 0.85)))
+    kw.setdefault("chunk_size", 64)
+    return SpaceSpec(**kw)
+
+
+def assert_fronts_identical(a: dse.ParetoFrontier, b: dse.ParetoFrontier):
+    # one assert per axis (diagnosable failures); frontiers_identical is the
+    # same comparison the bench gate and resume example use
+    ca, ea, la, ia = canonical_frontier(a)
+    cb, eb, lb, ib = canonical_frontier(b)
+    assert ca == cb
+    np.testing.assert_array_equal(ea, eb)
+    np.testing.assert_array_equal(la, lb)
+    np.testing.assert_array_equal(ia, ib)
+    assert frontiers_identical(a, b)
+
+
+def stream_frontier(spec, wl=WL, cons=CONS, chunk_size=None) -> dse.ParetoFrontier:
+    fr = StreamingFrontier()
+    for t, lo, batch in spec.tiles(chunk_size=chunk_size):
+        sim, feas = dse.evaluate_workload_tile(wl, batch, cons)
+        fr.merge(batch.candidates, sim.energy_j, sim.latency_s, feas,
+                 indices=np.arange(lo, lo + len(batch)), tile=t)
+    return fr.as_pareto_frontier(wl)
+
+
+# --- SpaceSpec: index arithmetic, never-materialized addressing ---------------
+
+
+def test_spacespec_len_and_point_addressing():
+    spec = small_spec()
+    batch = spec.slice(0, len(spec))
+    assert len(batch) == len(spec) == spec.n_rows * spec.freq_points
+    for i in [0, 1, len(spec) // 2, len(spec) - 1]:
+        assert batch[i] == spec.candidate(i)
+    with pytest.raises(IndexError):
+        spec.candidate(len(spec))
+
+
+def test_spacespec_slice_matches_full_enumeration():
+    spec = small_spec()
+    full = spec.slice(0, len(spec))
+    lo, hi = 13, 101
+    sub = spec.slice(lo, hi)
+    assert sub.candidates == full.candidates[lo:hi]
+    np.testing.assert_array_equal(sub.chip_idx, full.chip_idx[lo:hi])
+    np.testing.assert_array_equal(sub.n_chips, full.n_chips[lo:hi])
+    np.testing.assert_array_equal(sub.freq_mhz, full.freq_mhz[lo:hi])
+
+
+def test_spacespec_tiles_bounded_by_chunk_size():
+    spec = small_spec(chunk_size=17)
+    seen, total = 0, 0
+    for t, lo, batch in spec.tiles():
+        assert len(batch) <= 17
+        assert lo == t * 17 == total
+        total += len(batch)
+        seen += 1
+    assert total == len(spec)
+    assert seen == spec.n_tiles()
+
+
+def test_spacespec_uniform_variant_matches_frequency_sweep_bitwise():
+    spec = small_spec(variants=(SliceVariant(),), freq_points=12)
+    batch = spec.slice(0, len(spec))
+    for chip in spec.chips:
+        sweep = frequency_sweep(chip, 12)
+        rows = np.flatnonzero(
+            np.asarray([c.chip == chip for c in batch.candidates]))
+        got = sorted(set(batch.freq_mhz[rows].tolist()))
+        assert got == sorted(set(sweep)), chip
+
+
+def test_spacespec_edge_chip_collapses_to_single_chip():
+    spec = small_spec()
+    batch = spec.slice(0, len(spec))
+    for c in batch.candidates:
+        if CHIPS[c.chip].ici_bw == 0:
+            assert c.n_chips == 1 and c.mesh == (1, 1)
+
+
+def test_spacespec_roundtrip_and_registry_guard():
+    spec = small_spec()
+    again = SpaceSpec.from_dict(spec.to_dict())
+    assert again == spec
+    bad = spec.to_dict()
+    bad["size"] += 1
+    with pytest.raises(ValueError):
+        SpaceSpec.from_dict(bad)
+
+
+def test_default_campaign_space_is_mega():
+    spec = default_campaign_space()
+    assert len(spec) >= 100_000
+    # resident state is the row table, orders of magnitude below the space
+    assert spec.n_rows * spec.freq_points == len(spec)
+    assert spec.n_rows < len(spec) // 100
+
+
+def test_mesh_factorizations_products_and_dedup():
+    for n in (1, 4, 12, 64, 256):
+        for dims in (2, 3):
+            ms = mesh_factorizations(n, dims)
+            assert len(set(ms)) == len(ms)
+            for m in ms:
+                assert int(np.prod(m)) == n
+                assert list(m) == sorted(m)        # nondecreasing
+                if len(m) == 3:
+                    assert m[0] >= 2               # real pod dimension
+    assert mesh_factorizations(16, 2) == ((1, 16), (2, 8), (4, 4))
+    assert (2, 2, 4) in mesh_factorizations(16, 3)
+    with pytest.raises(ValueError):
+        mesh_factorizations(0)
+
+
+# --- frequency_sweep endpoint regression (satellite fix) ----------------------
+
+
+def test_frequency_sweep_exact_endpoints():
+    for name, spec in CHIPS.items():
+        for points in (2, 3, 7, 12, 51):
+            s = frequency_sweep(name, points)
+            assert len(s) == points
+            assert s[0] == spec.min_freq_mhz        # exact, not approx
+            assert s[-1] == spec.max_freq_mhz
+            assert all(a <= b for a, b in zip(s, s[1:]))
+        assert frequency_sweep(name, 1) == [spec.max_freq_mhz]
+
+
+# --- streamed frontier == one-shot pareto_search ------------------------------
+
+
+def test_streaming_equals_oneshot_on_seeded_subspace():
+    spec = small_spec()
+    oneshot = dse.pareto_search(WL, spec.slice(0, len(spec)), CONS)[
+        ("qwen3_14b", "train_4k")]
+    assert_fronts_identical(stream_frontier(spec), oneshot)
+
+
+def test_tile_boundary_invariance():
+    """chunk_size must not change the frontier: {1, 7, 4096} all identical."""
+    spec = small_spec(chip_counts=(16,), freq_points=5)
+    fronts = [stream_frontier(spec, chunk_size=c) for c in (1, 7, 4096)]
+    assert_fronts_identical(fronts[0], fronts[1])
+    assert_fronts_identical(fronts[0], fronts[2])
+
+
+def test_streaming_equals_oneshot_mega_space():
+    """The acceptance gate: >=100k generated candidates, chunked, identical
+    frontier to one-shot pareto_search on the same concatenated space."""
+    spec = default_campaign_space(chunk_size=8192)
+    assert len(spec) >= 100_000
+    streamed = stream_frontier(spec, chunk_size=8192)
+    oneshot = dse.pareto_search(WL, spec.slice(0, len(spec)), CONS)[
+        ("qwen3_14b", "train_4k")]
+    assert_fronts_identical(streamed, oneshot)
+
+
+# --- StreamingFrontier merge properties ---------------------------------------
+
+
+def _merge_points(fr, pts, indices):
+    cands = [dse.Candidate("tpu-v5e", 1, (1, 1), 1000.0 + i) for i in indices]
+    e = np.asarray([p[0] for p in pts], np.float64)
+    l = np.asarray([p[1] for p in pts], np.float64)
+    fr.merge(cands, e, l, indices=np.asarray(indices, np.int64))
+    return fr
+
+
+def test_merge_idempotent_by_global_index():
+    pts = [(3.0, 1.0), (2.0, 2.0), (1.0, 3.0), (5.0, 5.0)]
+    fr = _merge_points(StreamingFrontier(), pts, [0, 1, 2, 3])
+    size1 = len(fr)
+    snap = (fr.energy_j.copy(), fr.latency_s.copy(), fr.indices.copy())
+    _merge_points(fr, pts, [0, 1, 2, 3])            # re-merge the same tile
+    assert len(fr) == size1
+    np.testing.assert_array_equal(fr.energy_j, snap[0])
+    np.testing.assert_array_equal(fr.latency_s, snap[1])
+    np.testing.assert_array_equal(fr.indices, snap[2])
+    # accounting is idempotent too, not just the frontier set
+    assert fr.evaluated == 4 and fr.feasible_seen == 4
+    _merge_points(fr, [pts[1], (9.0, 9.0)], [1, 7])  # partial overlap
+    assert fr.evaluated == 5 and fr.feasible_seen == 5
+
+
+def test_evaluate_workload_tile_rejects_unknown_engine():
+    spec = small_spec()
+    batch = spec.slice(0, 8)
+    with pytest.raises(ValueError, match="unknown engine"):
+        dse.evaluate_workload_tile(WL, batch, CONS, engine="fast")
+
+
+def test_merge_keeps_equal_duplicates_like_oneshot():
+    # equal (energy, latency) at DIFFERENT indices: neither dominates, both
+    # stay — matching pareto_search's duplicate semantics
+    fr = _merge_points(StreamingFrontier(), [(1.0, 1.0)], [0])
+    _merge_points(fr, [(1.0, 1.0)], [1])
+    assert len(fr) == 2
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.floats(0.1, 100.0), st.floats(0.1, 100.0)),
+                min_size=1, max_size=24),
+       st.integers(1, 5),
+       st.randoms(use_true_random=False))
+def test_merge_commutative_and_idempotent_property(pts, n_chunks, rng):
+    """Any tiling AND any tile order AND re-merged duplicates give the same
+    frontier as a single merge of all points."""
+    idx = list(range(len(pts)))
+    ref = _merge_points(StreamingFrontier(), pts, idx)
+
+    order = idx[:]
+    rng.shuffle(order)
+    bounds = sorted(rng.sample(range(len(pts) + 1), min(n_chunks, len(pts)))
+                    ) + [len(pts)]
+    fr = StreamingFrontier()
+    lo = 0
+    for hi in bounds:
+        if hi > lo:
+            chunk = order[lo:hi]
+            _merge_points(fr, [pts[i] for i in chunk], chunk)
+            if rng.random() < 0.5:                  # idempotence under repeats
+                _merge_points(fr, [pts[i] for i in chunk], chunk)
+        lo = hi
+    np.testing.assert_array_equal(fr.energy_j, ref.energy_j)
+    np.testing.assert_array_equal(fr.latency_s, ref.latency_s)
+    np.testing.assert_array_equal(fr.indices, ref.indices)
+
+
+def test_trajectory_snapshots_monotone_accounting():
+    spec = small_spec()
+    fr = StreamingFrontier()
+    for t, lo, batch in spec.tiles():
+        sim, feas = dse.evaluate_workload_tile(WL, batch, CONS)
+        fr.merge(batch.candidates, sim.energy_j, sim.latency_s, feas,
+                 indices=np.arange(lo, lo + len(batch)), tile=t)
+    traj = fr.trajectory
+    assert len(traj) == spec.n_tiles()
+    assert traj[-1].evaluated == len(spec)
+    for a, b in zip(traj, traj[1:]):
+        assert b.evaluated > a.evaluated
+        assert b.feasible >= a.feasible
+        assert b.best_energy_j <= a.best_energy_j       # extremes only improve
+        assert b.best_latency_s <= a.best_latency_s
+        # hv never shrinks (rel slack: summation-order float noise only)
+        assert b.hypervolume >= a.hypervolume * (1 - 1e-12)
+
+
+# --- Campaign: resume == fresh, persistence -----------------------------------
+
+
+ART_WORKLOADS = [
+    dse.Workload("qwen3_14b", "train_4k", BASE, 256, 0.5),
+    dse.Workload("stablelm_1_6b", "train_4k",
+                 {k: v * 0.2 for k, v in BASE.items()}, 256, 0.1),
+]
+
+
+def test_campaign_resume_equals_fresh(tmp_path):
+    spec = small_spec(chunk_size=48)
+    ckpt = str(tmp_path / "ckpt.json")
+    cons = dse.Constraint(max_power_w=40_000, min_hbm_fit=False)
+
+    interrupted = Campaign(ART_WORKLOADS, spec, constraint=cons)
+    partial = interrupted.run(checkpoint_path=ckpt, max_tiles=2)
+    assert not partial.complete and partial.tiles_done == 2
+
+    resumed = Campaign.from_checkpoint(ckpt)
+    assert resumed.next_tile == 2
+    final = resumed.run(checkpoint_path=ckpt)
+    assert final.complete
+
+    fresh = Campaign(ART_WORKLOADS, spec, constraint=cons).run()
+    assert set(final.frontiers) == set(fresh.frontiers)
+    for key in fresh.frontiers:
+        assert_fronts_identical(final.frontiers[key], fresh.frontiers[key])
+        assert ([s.as_dict() for s in final.trajectories[key]]
+                == [s.as_dict() for s in fresh.trajectories[key]])
+
+
+def test_campaign_resume_restores_sim_config(tmp_path):
+    """A non-default SimConfig must survive checkpoint/resume — otherwise a
+    resumed frontier would silently mix two different simulators."""
+    from repro.core import costmodel
+    spec = small_spec(chunk_size=48)
+    sim = costmodel.SimConfig(overlap=1.0, links_used=4)
+    ckpt = str(tmp_path / "ckpt.json")
+    camp = Campaign(ART_WORKLOADS[:1], spec, sim=sim)
+    camp.run(checkpoint_path=ckpt, max_tiles=1)
+    resumed = Campaign.from_checkpoint(ckpt)
+    assert resumed.sim == sim
+    final = resumed.run()
+    fresh = Campaign(ART_WORKLOADS[:1], spec, sim=sim).run()
+    for key in fresh.frontiers:
+        assert_fronts_identical(final.frontiers[key], fresh.frontiers[key])
+
+
+def test_campaign_checkpoint_roundtrip_and_version_guard(tmp_path):
+    spec = small_spec(chunk_size=48)
+    camp = Campaign(ART_WORKLOADS[:1], spec)
+    camp.run(max_tiles=1)
+    path = str(tmp_path / "state.json")
+    store.save_checkpoint(camp.state_dict(), path)
+    state = store.load_checkpoint(path)
+    assert state["next_tile"] == 1
+    again = Campaign.from_checkpoint(path)
+    assert again.space == spec
+    assert [(w.arch, w.shape) for w in again.workloads] == [
+        (w.arch, w.shape) for w in camp.workloads]
+    state["version"] = 99
+    with open(path, "w") as f:
+        json.dump(state, f)
+    with pytest.raises(ValueError):
+        store.load_checkpoint(path)
+
+
+def test_campaign_matches_oneshot_pareto_per_workload():
+    spec = small_spec()
+    cons = dse.Constraint(max_power_w=40_000, min_hbm_fit=False)
+    result = Campaign(ART_WORKLOADS, spec, constraint=cons).run()
+    fronts = dse.pareto_search(ART_WORKLOADS, spec.slice(0, len(spec)), cons)
+    for key, front in fronts.items():
+        assert_fronts_identical(result.frontiers[key], front)
+
+
+def test_campaign_report_payload_shape(tmp_path):
+    spec = small_spec(chunk_size=48)
+    cons = dse.Constraint(max_power_w=40_000, min_hbm_fit=False)
+    camp = Campaign(ART_WORKLOADS, spec, constraint=cons)
+    result = camp.run()
+    path = store.save_campaign(result, spec.to_dict(),
+                               {"max_power_w": 40_000}, camp.evaluator,
+                               str(tmp_path))
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["bench"] == "dse_campaign"
+    assert payload["complete"] and payload["tiles_done"] == spec.n_tiles()
+    assert payload["space"]["size"] == len(spec)
+    assert payload["throughput"]["candidates_evaluated"] == 2 * len(spec)
+    for key, fr in payload["frontiers"].items():
+        arch, shape = key.split("|")
+        front = result.frontiers[(arch, shape)]
+        assert len(fr["points"]) == len(front)
+        assert fr["feasible_count"] == front.feasible_count
+        p = fr["points"][0]
+        assert set(p) == {"chip", "n_chips", "mesh", "freq_mhz", "energy_j",
+                          "latency_s", "index"}
+    assert all(len(t) == spec.n_tiles() for t in payload["trajectory"].values())
