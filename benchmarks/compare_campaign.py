@@ -1,0 +1,103 @@
+"""Cross-PR frontier regression check for ``BENCH_dse_campaign.json``.
+
+CI uploads the campaign artifact on every run; this script diffs the current
+artifact against the previous run's and fails when a workload's final
+hypervolume proxy regresses by more than ``--hv-rel-tol`` (the ROADMAP's
+"diff frontiers across PRs" open item).  Frontier-size and best-extreme
+changes are reported but informational — intentional model changes move
+them, while a hypervolume collapse on an unchanged model is a real bug.
+
+  python -m benchmarks.compare_campaign PREV.json NEW.json [--hv-rel-tol 0.05]
+
+A missing/unreadable PREV (first run, expired artifact) is a clean pass so
+the step can be wired unconditionally into CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+
+def final_hypervolumes(payload: Dict) -> Dict[str, float]:
+    """Workload key -> last trajectory snapshot's hypervolume proxy."""
+    return {key: snaps[-1]["hypervolume"]
+            for key, snaps in payload.get("trajectory", {}).items() if snaps}
+
+
+def compare_campaigns(prev: Dict, new: Dict,
+                      hv_rel_tol: float = 0.05) -> Tuple[bool, List[str]]:
+    """(ok, report lines) for a prev -> new campaign artifact pair.
+
+    ``ok`` is False iff a workload present in BOTH artifacts regressed its
+    final hypervolume by more than ``hv_rel_tol`` relative.  Workloads that
+    appear or disappear (artifact-cache growth) are reported, not gated, and
+    artifacts from different ``sim_model_version``s (intentional cost-model
+    changes) are never gated against each other — their hypervolume proxies
+    are not comparable.
+    """
+    hv_prev = final_hypervolumes(prev)
+    hv_new = final_hypervolumes(new)
+    lines, ok = [], True
+    gate = True
+    vp, vn = prev.get("sim_model_version"), new.get("sim_model_version")
+    if vp != vn:
+        # intentional cost-model change: hypervolumes are not comparable
+        lines.append(f"sim model version changed ({vp} -> {vn}); "
+                     "reporting only, hv regression not gated")
+        gate = False
+    if prev.get("space", {}).get("size") != new.get("space", {}).get("size"):
+        lines.append(f"space size changed: {prev.get('space', {}).get('size')}"
+                     f" -> {new.get('space', {}).get('size')}")
+    for key in sorted(set(hv_prev) | set(hv_new)):
+        if key not in hv_prev:
+            lines.append(f"{key}: NEW workload (hv {hv_new[key]:.6e})")
+            continue
+        if key not in hv_new:
+            lines.append(f"{key}: workload DROPPED from artifact")
+            continue
+        p, n = hv_prev[key], hv_new[key]
+        rel = (n - p) / abs(p) if p else 0.0
+        fp = len(prev["frontiers"].get(key, {}).get("points", []))
+        fn = len(new["frontiers"].get(key, {}).get("points", []))
+        tag = "ok"
+        if gate and p and rel < -hv_rel_tol:
+            tag = f"REGRESSION (> {hv_rel_tol:.0%} hv loss)"
+            ok = False
+        lines.append(f"{key}: hv {p:.6e} -> {n:.6e} ({rel:+.2%}), "
+                     f"frontier {fp} -> {fn} points  [{tag}]")
+    if not hv_prev:
+        lines.append("previous artifact has no trajectories; nothing gated")
+    return ok, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("prev", help="previous BENCH_dse_campaign.json")
+    ap.add_argument("new", help="current BENCH_dse_campaign.json")
+    ap.add_argument("--hv-rel-tol", type=float, default=0.05,
+                    help="max allowed relative hypervolume regression")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.prev) as f:
+            prev = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"[compare_campaign] no usable previous artifact "
+              f"({args.prev}: {e}); skipping compare")
+        return 0
+    with open(args.new) as f:
+        new = json.load(f)
+    ok, lines = compare_campaigns(prev, new, args.hv_rel_tol)
+    for ln in lines:
+        print(f"[compare_campaign] {ln}")
+    if not ok:
+        print("[compare_campaign] FAIL: frontier hypervolume regressed")
+        return 1
+    print("[compare_campaign] PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

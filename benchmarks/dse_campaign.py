@@ -15,9 +15,33 @@ import dataclasses
 
 from benchmarks.common import (ART_DIR, OUT_DIR, csv_row, ensure_artifacts,
                                write_report)
-from repro.core import dse
+from repro.core import costmodel, dse
 from repro.dse_campaign import (Campaign, default_campaign_space,
                                 frontiers_identical, store)
+from repro.hw import get_chip, mesh_factorizations
+
+
+def mesh_tie_report(wl: dse.Workload, chip_name: str = "tpu-v5e",
+                    n_chips: int = 64) -> dict:
+    """Before/after view of the factorization axis on one same-count family:
+    the mesh-agnostic model ties every factorization of ``n_chips``; the
+    topology model separates them.  Returns the counts the report prints."""
+    chip = get_chip(chip_name)
+    meshes = mesh_factorizations(n_chips, 3)
+    legacy, topo = [], []
+    for mesh in meshes:
+        cand = dse.Candidate(chip_name, n_chips, mesh, chip.max_freq_mhz)
+        ana = dse._scale_analysis(wl.base_analysis, wl.base_chips, cand)
+        legacy.append(costmodel.simulate(
+            ana, chip, n_chips, chip.max_freq_mhz).t_collective)
+        topo.append(costmodel.simulate(
+            ana, chip, n_chips, chip.max_freq_mhz, mesh=mesh).t_collective)
+    ties_before = len(meshes) - len(set(legacy))
+    ties_after = len(meshes) - len(set(topo))
+    return {"chip": chip_name, "n_chips": n_chips, "meshes": meshes,
+            "t_coll_topology": topo, "ties_before": ties_before,
+            "ties_after": ties_after,
+            "ties_broken": ties_before - ties_after}
 
 
 def run() -> list:
@@ -68,6 +92,32 @@ def run() -> list:
     for (arch, shape), front in sorted(result.frontiers.items()):
         report.append(f"  {arch} x {shape}: {len(front)} frontier points of "
                       f"{front.feasible_count} feasible")
+
+    # topology model: the factorization axis now carries signal — report the
+    # frontier rows WITH their meshes and the same-count ties it broke
+    ties = mesh_tie_report(wl)
+    report += [
+        "",
+        f"mesh factorization signal ({ties['chip']} x{ties['n_chips']}, "
+        f"{len(ties['meshes'])} same-count meshes):",
+        f"  frontier ties before (mesh-agnostic model): {ties['ties_before']}",
+        f"  frontier ties after  (topology model):      {ties['ties_after']}",
+        f"  ties broken: {ties['ties_broken']}",
+    ]
+    for mesh, t in zip(ties["meshes"], ties["t_coll_topology"]):
+        report.append(f"    mesh {'x'.join(map(str, mesh)):>8}: "
+                      f"t_coll {t * 1e3:9.3f} ms")
+    front = result.frontiers[key]
+    report.append("")
+    report.append("mesh-differentiated frontier rows (first workload, "
+                  "first 12 by latency):")
+    for cand, e, lat in list(zip(front.candidates, front.energy_j,
+                                 front.latency_s))[:12]:
+        report.append(
+            f"    {cand.chip:>8} x{cand.n_chips:<4} "
+            f"mesh {'x'.join(map(str, cand.mesh)):>8} @ "
+            f"{cand.freq_mhz:7.1f} MHz   {lat * 1e3:9.2f} ms   "
+            f"{e:12.1f} J")
     write_report("dse_campaign.md", "\n".join(report))
 
     rows = [
@@ -80,9 +130,15 @@ def run() -> list:
                          in sorted(result.frontiers.items()))),
         csv_row("dse_campaign_identity", 0.0,
                 f"streamed_equals_oneshot={identical}"),
+        csv_row("dse_campaign_mesh_signal", 0.0,
+                f"ties_before={ties['ties_before']};"
+                f"ties_after={ties['ties_after']};"
+                f"ties_broken={ties['ties_broken']}"),
     ]
     # gate AFTER report/rows so a mismatch still leaves diagnostics behind
     assert identical, "streamed frontier diverged from one-shot pareto_search"
+    assert ties["ties_broken"] > 0, \
+        "topology model failed to break same-count mesh ties"
     return rows
 
 

@@ -10,7 +10,18 @@ exactly like the paper.
 
 Latency model:
   t_comp = flops / (peak * mxu_derate)        t_mem = hbm_bytes / hbm_bw
-  t_coll = wire_bytes / (ici_bw * links_used)
+  t_coll -- topology-aware when the candidate's mesh is known: the collective
+  payload splits into a data-parallel share (hierarchical ring all-reduce over
+  the pod x data axes) and a model-parallel share (all-gather/reduce-scatter
+  on the model axis), each axis costing
+
+      t_axis = bytes_axis * (k - 1)/k / (ici_bw * links_axis)
+               + 2 * (k - 1) * hop_s
+
+  with per-axis link counts from ``hw.axis_link_counts`` (ring vs. torus
+  wraparound, chip link-budget degradation).  Without a mesh the legacy
+  scalar fallback ``wire_bytes / (ici_bw * links_used)`` applies
+  (``SimConfig.links_used`` is deprecated and only feeds this fallback).
   latency = max(t) + (1 - overlap) * (sum(t) - max(t))
     -- overlap=0.8: XLA latency-hiding overlaps most, not all, of the
        non-dominant terms.
@@ -24,11 +35,25 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Dict, Optional
 
 import numpy as np
 
-from repro.hw import CHIP_TABLE, ChipSpec, ChipTable, get_chip
+from repro.hw import (CHIP_TABLE, ChipSpec, ChipTable, axis_link_counts,
+                      get_chip, normalize_mesh)
+
+# default fraction of the collective payload attributed to model-parallel
+# collectives (activation all-gather/reduce-scatter on the model axis); the
+# remainder is the data-parallel all-reduce share.  The split happens in ONE
+# place (``collective_payload``), always from the simulating ``SimConfig``'s
+# ``coll_model_frac`` — analyses carry only the un-split payload.
+COLL_MODEL_FRAC = 0.5
+
+# bump when the cost model's arithmetic changes on purpose: the CI frontier
+# compare (benchmarks/compare_campaign.py) only gates hypervolume regressions
+# between artifacts produced by the SAME model version
+SIM_MODEL_VERSION = 2   # 1 = mesh-agnostic links_used; 2 = topology-aware
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,7 +62,18 @@ class SimConfig:
     w_mxu: float = 0.55
     w_hbm: float = 0.30
     w_ici: float = 0.15
-    links_used: int = 2          # links concurrently busy per collective step
+    links_used: int = 2          # DEPRECATED: only the mesh-less fallback
+                                 # path reads this; topology-aware simulation
+                                 # derives links from hw.axis_link_counts
+    coll_model_frac: float = COLL_MODEL_FRAC
+
+    def __post_init__(self):
+        if self.links_used != 2:
+            warnings.warn(
+                "SimConfig.links_used is deprecated: the collective model is "
+                "topology-aware (pass the candidate mesh to simulate / "
+                "simulate_batch); links_used only affects the mesh-less "
+                "fallback path", DeprecationWarning, stacklevel=2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +98,67 @@ def wire_bytes(analysis: Dict):
     return analysis.get("wire_bytes", analysis.get("collective_bytes", 0.0))
 
 
+def _raw_payload(analysis: Dict, n_chips, xp):
+    """Un-ring-factored collective payload bytes per device.
+
+    Prefers the ``coll_payload_bytes`` key that ``dse._scale_analysis``
+    emits; otherwise derives it from ``wire_bytes`` by un-applying the
+    whole-slice ring factor (n-1)/n that first-order scaling applied."""
+    if "coll_payload_bytes" in analysis:
+        return xp.asarray(analysis["coll_payload_bytes"])
+    wire = xp.asarray(wire_bytes(analysis))
+    n = xp.asarray(n_chips) * 1.0
+    ring = xp.where(n > 1, (n - 1.0) / xp.maximum(n, 1.0), 1.0)
+    return wire / ring
+
+
+def collective_payload(analysis: Dict, n_chips, frac: float, xp=np):
+    """(data_bytes, model_bytes) collective payload split for a candidate.
+
+    The ONLY place the data/model split happens, so the simulating
+    ``SimConfig.coll_model_frac`` is always honored.  Identical IEEE
+    expressions in scalar and array form, so every simulate variant splits
+    bitwise the same."""
+    payload = _raw_payload(analysis, n_chips, xp)
+    return payload * (1.0 - frac), payload * frac
+
+
+def _axis_collective_time(payload, extent, links, ici_bw, hop_s, xp):
+    """Ring time of one mesh axis: bandwidth term + per-step hop latency.
+
+    t = payload * (k-1)/k / (ici_bw * links) + 2*(k-1)*hop_s
+    (reduce-scatter + all-gather, k-1 ring steps each).  Inactive axes
+    (k <= 1), axes moving zero bytes, linkless chips, and zero-bandwidth
+    chips contribute 0."""
+    k = xp.asarray(extent) * 1.0
+    links = xp.asarray(links) * 1.0
+    bw = xp.asarray(ici_bw) * 1.0
+    live = (k > 1) & (links > 0) & (bw > 0) & (xp.asarray(payload) > 0)
+    denom = xp.where(live, bw * xp.where(links > 0, links, 1.0), 1.0)
+    t_bw = payload * (k - 1.0) / xp.maximum(k, 1.0) / denom
+    t_hop = 2.0 * (k - 1.0) * hop_s
+    return xp.where(live, t_bw + t_hop, 0.0)
+
+
+def topology_collective_time(p_data, p_model, mesh_pod, mesh_data, mesh_model,
+                             ici_bw, ici_links, links_per_axis, hop_s, xp=np):
+    """Topology-aware collective time over the (pod, data, model) mesh axes.
+
+    The model-parallel payload rides the model axis; the data-parallel
+    payload does a hierarchical ring all-reduce: a full ring over the data
+    axis, then the pod axis on the 1/k_data shard that survives the first
+    reduce-scatter stage.  Per-axis link counts come from
+    ``hw.axis_link_counts`` (torus wraparound, link-budget degradation)."""
+    lp, ld, lm = axis_link_counts(mesh_pod, mesh_data, mesh_model,
+                                  ici_links, links_per_axis, xp=xp)
+    kd = xp.asarray(mesh_data) * 1.0
+    return (_axis_collective_time(p_data, mesh_data, ld, ici_bw, hop_s, xp)
+            + _axis_collective_time(p_data / xp.maximum(kd, 1.0), mesh_pod,
+                                    lp, ici_bw, hop_s, xp)
+            + _axis_collective_time(p_model, mesh_model, lm, ici_bw, hop_s,
+                                    xp))
+
+
 def roofline_terms(analysis: Dict, chip: ChipSpec, n_chips: int) -> Dict:
     """The §Roofline contract.  ``analysis`` holds PER-DEVICE HxA numbers, so
     term = per_device_quantity / per_chip_rate == global / (chips * rate)."""
@@ -80,15 +177,29 @@ def roofline_terms(analysis: Dict, chip: ChipSpec, n_chips: int) -> Dict:
 
 def simulate(analysis: Dict, chip: ChipSpec, n_chips: int,
              freq_mhz: Optional[float] = None,
-             sim: SimConfig = SimConfig()) -> SimResult:
-    """Slow-accurate path: deterministic latency/power from a compiled cell."""
+             sim: SimConfig = SimConfig(), mesh=None) -> SimResult:
+    """Slow-accurate path: deterministic latency/power from a compiled cell.
+
+    With ``mesh`` (the candidate's mesh tuple) the collective term is the
+    topology-aware per-axis model; without it the deprecated mesh-agnostic
+    ``links_used`` fallback applies.  The topology arithmetic runs through
+    the same xp-generic helpers as ``simulate_batch``, so scalar and batch
+    agree bitwise."""
     if freq_mhz is None:
         freq_mhz = chip.nominal_freq_mhz
     chip_f = chip.at_frequency(freq_mhz)
     t_comp = analysis["flops"] / chip_f.peak_flops_bf16
     t_mem = analysis["hbm_bytes"] / chip_f.hbm_bw
     wire = wire_bytes(analysis)
-    t_coll = wire / (chip_f.ici_bw * max(sim.links_used, 1)) if chip_f.ici_bw else 0.0
+    if mesh is not None:
+        pod, data, model = normalize_mesh(mesh)
+        p_d, p_m = collective_payload(analysis, n_chips, sim.coll_model_frac)
+        t_coll = float(topology_collective_time(
+            p_d, p_m, pod, data, model, chip_f.ici_bw, chip_f.ici_links,
+            chip_f.ici_links_per_axis, chip_f.ici_hop_s))
+    else:
+        t_coll = (wire / (chip_f.ici_bw * max(sim.links_used, 1))
+                  if chip_f.ici_bw else 0.0)
 
     ts = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
     dom = max(ts, key=ts.get)
@@ -110,8 +221,9 @@ def simulate(analysis: Dict, chip: ChipSpec, n_chips: int,
 
 
 def simulate_by_name(analysis: Dict, chip_name: str, n_chips: int,
-                     freq_mhz: Optional[float] = None) -> SimResult:
-    return simulate(analysis, get_chip(chip_name), n_chips, freq_mhz)
+                     freq_mhz: Optional[float] = None, mesh=None) -> SimResult:
+    return simulate(analysis, get_chip(chip_name), n_chips, freq_mhz,
+                    mesh=mesh)
 
 
 # --- Batched (struct-of-arrays) path ------------------------------------------
@@ -127,7 +239,8 @@ BOTTLENECKS = ("compute", "memory", "collective")
 # ``gathered`` dicts only need (and multi-workload tiling only tiles) these
 SIM_GATHER_FIELDS = ("nominal_freq_mhz", "min_freq_mhz", "max_freq_mhz",
                      "peak_flops_bf16", "hbm_bw", "ici_bw", "tdp_watts",
-                     "idle_watts")
+                     "idle_watts", "ici_links", "ici_links_per_axis",
+                     "ici_hop_s")
 
 
 @dataclasses.dataclass(frozen=True, eq=False)  # eq=False: ndarray fields
@@ -167,15 +280,20 @@ class SimBatch:
 def simulate_batch(analysis: Dict, chip_idx, n_chips,
                    freq_mhz=None, sim: SimConfig = SimConfig(),
                    table: ChipTable = CHIP_TABLE, xp=np,
-                   gathered: Optional[Dict] = None) -> SimBatch:
+                   gathered: Optional[Dict] = None,
+                   mesh_pod=None, mesh_data=None, mesh_model=None) -> SimBatch:
     """Vectorized ``simulate`` over arrays of candidates.
 
     ``analysis`` holds per-device arrays (or scalars, broadcast) of flops /
-    hbm_bytes / collective_bytes / wire_bytes; ``chip_idx`` indexes
-    ``table``; ``n_chips`` / ``freq_mhz`` are per-candidate arrays.  With the
-    default ``xp=np`` the arithmetic is float64 and agrees with the scalar
-    path to machine precision; any array namespace with the numpy API (e.g.
-    ``jax.numpy``) works, making the body jit-able.  ``gathered`` (from
+    hbm_bytes / collective_bytes / wire_bytes (plus the optional
+    ``coll_payload_bytes`` un-split collective payload); ``chip_idx``
+    indexes ``table``; ``n_chips`` / ``freq_mhz`` are per-candidate arrays.
+    With ``mesh_data``/``mesh_model`` (and optionally ``mesh_pod``) the
+    collective term is the topology-aware per-axis model; without them the
+    deprecated ``links_used`` fallback applies.  With the default ``xp=np``
+    the arithmetic is float64 and agrees with the scalar path to machine
+    precision; any array namespace with the numpy API (e.g. ``jax.numpy``)
+    works, making the body jit-able.  ``gathered`` (from
     ``table.gather(chip_idx)``) skips the per-call column gathers when the
     same candidate batch is swept repeatedly.
     """
@@ -200,10 +318,25 @@ def simulate_batch(analysis: Dict, chip_idx, n_chips,
 
     t_comp = flops / peak
     t_mem = hbm_bytes / hbm_bw
-    has_ici = ici_bw > 0
-    t_coll = xp.where(
-        has_ici, wire / (xp.where(has_ici, ici_bw, 1.0) * max(sim.links_used, 1)),
-        0.0)
+    if mesh_model is not None:
+        if mesh_data is None:
+            raise ValueError("mesh_model without mesh_data; pass both "
+                             "trailing mesh axes (mesh_pod is optional)")
+        if mesh_pod is None:
+            mesh_pod = xp.ones(xp.shape(xp.asarray(mesh_model)), xp.asarray(
+                mesh_model).dtype)
+        p_d, p_m = collective_payload(analysis, n_chips,
+                                      sim.coll_model_frac, xp=xp)
+        t_coll = topology_collective_time(
+            p_d, p_m, mesh_pod, mesh_data, mesh_model, ici_bw,
+            gathered["ici_links"], gathered["ici_links_per_axis"],
+            gathered["ici_hop_s"], xp=xp)
+    else:
+        has_ici = ici_bw > 0
+        t_coll = xp.where(
+            has_ici,
+            wire / (xp.where(has_ici, ici_bw, 1.0) * max(sim.links_used, 1)),
+            0.0)
 
     ts = xp.stack([t_comp, t_mem, t_coll])         # BOTTLENECKS order
     dom = xp.argmax(ts, axis=0)
@@ -232,28 +365,56 @@ def simulate_batch(analysis: Dict, chip_idx, n_chips,
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_simulate_batch(sim: SimConfig):
+def _jit_simulate_batch(sim: SimConfig, with_mesh: bool):
     import jax
     import jax.numpy as jnp
 
-    def run(flops, hbm_bytes, wire_bytes, chip_idx, n_chips, freq_mhz):
-        batch = simulate_batch(
-            {"flops": flops, "hbm_bytes": hbm_bytes, "wire_bytes": wire_bytes},
-            chip_idx, n_chips, freq_mhz, sim=sim, xp=jnp)
-        return dataclasses.asdict(batch)
+    if with_mesh:
+        def run(flops, hbm_bytes, payload, chip_idx, n_chips,
+                freq_mhz, mesh_pod, mesh_data, mesh_model):
+            batch = simulate_batch(
+                {"flops": flops, "hbm_bytes": hbm_bytes,
+                 "coll_payload_bytes": payload, "wire_bytes": payload},
+                chip_idx, n_chips, freq_mhz, sim=sim, xp=jnp,
+                mesh_pod=mesh_pod, mesh_data=mesh_data, mesh_model=mesh_model)
+            return dataclasses.asdict(batch)
+    else:
+        def run(flops, hbm_bytes, wire_bytes, chip_idx, n_chips, freq_mhz):
+            batch = simulate_batch(
+                {"flops": flops, "hbm_bytes": hbm_bytes,
+                 "wire_bytes": wire_bytes},
+                chip_idx, n_chips, freq_mhz, sim=sim, xp=jnp)
+            return dataclasses.asdict(batch)
 
     return jax.jit(run)
 
 
 def simulate_batch_jit(analysis: Dict, chip_idx, n_chips, freq_mhz,
-                       sim: SimConfig = SimConfig()) -> SimBatch:
+                       sim: SimConfig = SimConfig(),
+                       mesh_pod=None, mesh_data=None,
+                       mesh_model=None) -> SimBatch:
     """jit-compiled ``simulate_batch`` on the default JAX backend.
 
     Accelerator path for very large spaces; float32 under the repo's default
     x64-disabled config, so expect ~1e-6 relative agreement rather than the
-    numpy path's exact match.
+    numpy path's exact match.  Passing ``mesh_data``/``mesh_model`` (and
+    optionally ``mesh_pod``) selects the topology-aware collective model;
+    the un-split payload is derived in float64 numpy BEFORE entering the
+    jit, then split in-trace by ``sim.coll_model_frac`` like every other
+    path.
     """
-    out = _jit_simulate_batch(sim)(
-        analysis["flops"], analysis["hbm_bytes"], wire_bytes(analysis),
-        np.asarray(chip_idx, np.int32), n_chips, freq_mhz)
+    if mesh_model is not None:
+        mesh_model = np.asarray(mesh_model, np.int32)
+        mesh_data = np.asarray(mesh_data, np.int32)
+        mesh_pod = (np.ones_like(mesh_model) if mesh_pod is None
+                    else np.asarray(mesh_pod, np.int32))
+        payload = _raw_payload(analysis, n_chips, np)
+        out = _jit_simulate_batch(sim, True)(
+            analysis["flops"], analysis["hbm_bytes"], payload,
+            np.asarray(chip_idx, np.int32), n_chips, freq_mhz,
+            mesh_pod, mesh_data, mesh_model)
+    else:
+        out = _jit_simulate_batch(sim, False)(
+            analysis["flops"], analysis["hbm_bytes"], wire_bytes(analysis),
+            np.asarray(chip_idx, np.int32), n_chips, freq_mhz)
     return SimBatch(**{k: np.asarray(v) for k, v in out.items()})

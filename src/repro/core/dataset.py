@@ -62,15 +62,39 @@ def load_dryrun_artifacts(art_dir: str) -> Dict[Tuple[str, str, str], dict]:
 
 
 def build_dataset(art_dir: str, chips: Optional[List[str]] = None,
-                  freq_points: int = 8, pod: str = "pod1"):
-    """Sweep cached cells x chips x frequencies -> (X, y_power, y_cycles, meta).
+                  freq_points: int = 8, pod: str = "pod1",
+                  mesh_counts: Tuple[int, ...] = (16, 64, 256),
+                  mesh_freq_points: int = 4):
+    """Sweep cached cells x chips x frequencies x meshes ->
+    (X, y_power, y_cycles, meta).
 
-    Labels: the calibrated simulator on the REAL compiled census (slow path).
-    Features: static config/hardware numerics only (fast path inputs).
+    Labels: the calibrated simulator on the REAL compiled census (slow path),
+    topology-aware — each design point's mesh prices its own collective
+    time.  Features: static config/hardware numerics only (fast path inputs).
+    Beyond the base-mesh DVFS sweep, ``mesh_counts`` adds a coarser
+    (``mesh_freq_points``) sweep over every 2D mesh factorization of each
+    count, rescaling the census first-order (``dse._scale_analysis``) — the
+    coverage the predictors need now that the factorization axis carries
+    signal in the DSE space.  Edge-class chips (``ici_bw == 0``) are swept
+    at their only valid design point (1 chip, 1x1 mesh) instead of the base
+    mesh, so the fast path stops extrapolating blindly into the edge region
+    of the space.  Pass ``mesh_counts=()`` for a base-mesh-only dataset.
     """
-    chips = chips or [c for c in CHIPS if CHIPS[c].ici_bw > 0]
+    from repro.core import dse  # local import: dse imports this module's deps
+    from repro.hw import mesh_factorizations
+
+    chips = chips if chips is not None else list(CHIPS)
     arts = load_dryrun_artifacts(art_dir)
     X, y_power, y_cycles, meta = [], [], [], []
+
+    def add_point(cfg, shape, names, chip, count, mesh, f, ana):
+        res = costmodel.simulate(ana, chip, count, freq_mhz=f, mesh=mesh)
+        X.append(features.extract(cfg, shape, chip, count,
+                                  mesh_shape=mesh, freq_mhz=f))
+        y_power.append(res.power_w)
+        y_cycles.append(res.cycles)
+        meta.append(DesignPoint(names[0], names[1], chip.name, f, mesh))
+
     for (arch, shape_name, pod_tag), art in sorted(arts.items()):
         if pod_tag != pod:
             continue
@@ -84,12 +108,22 @@ def build_dataset(art_dir: str, chips: Optional[List[str]] = None,
         mesh_shape = (2, 16, 16) if pod == "pod2" else (16, 16)
         for chip_name in chips:
             chip = get_chip(chip_name)
+            if chip.ici_bw == 0:
+                ana1 = dse._scale_analysis(
+                    analysis, n_chips, dse.Candidate(chip_name, 1, (1, 1), 0.0))
+                for f in frequency_sweep(chip_name, freq_points):
+                    add_point(cfg, shape, (arch, shape_name), chip, 1,
+                              (1, 1), f, ana1)
+                continue
             for f in frequency_sweep(chip_name, freq_points):
-                res = costmodel.simulate(analysis, chip, n_chips, freq_mhz=f)
-                X.append(features.extract(cfg, shape, chip, n_chips,
-                                          mesh_shape=mesh_shape, freq_mhz=f))
-                y_power.append(res.power_w)
-                y_cycles.append(res.cycles)
-                meta.append(DesignPoint(arch, shape_name, chip_name, f, mesh_shape))
+                add_point(cfg, shape, (arch, shape_name), chip, n_chips,
+                          mesh_shape, f, analysis)
+            for count in mesh_counts:
+                for mesh in mesh_factorizations(count, 2):
+                    cand0 = dse.Candidate(chip_name, count, mesh, 0.0)
+                    ana = dse._scale_analysis(analysis, n_chips, cand0)
+                    for f in frequency_sweep(chip_name, mesh_freq_points):
+                        add_point(cfg, shape, (arch, shape_name), chip,
+                                  count, mesh, f, ana)
     return (np.asarray(X, np.float32), np.asarray(y_power, np.float64),
             np.asarray(y_cycles, np.float64), meta)

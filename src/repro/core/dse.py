@@ -31,7 +31,8 @@ import numpy as np
 
 from repro.configs.base import SHAPES, get_config
 from repro.core import costmodel, features
-from repro.hw import CHIP_TABLE, CHIPS, ChipTable, get_chip, frequency_sweep
+from repro.hw import (CHIP_TABLE, CHIPS, ChipTable, get_chip, frequency_sweep,
+                      normalize_mesh)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +66,7 @@ class CandidateBatch:
     mesh_data: np.ndarray                    # int64 [N], mesh[-2] or 1
     mesh_model: np.ndarray                   # int64 [N], mesh[-1]
     freq_mhz: np.ndarray                     # float64 [N]
+    mesh_pod: Optional[np.ndarray] = None    # int64 [N], prod(mesh[:-2]) or 1
     chip_cols: Optional[Dict[str, np.ndarray]] = None  # CHIP_TABLE.gather cache
 
     @classmethod
@@ -72,14 +74,15 @@ class CandidateBatch:
                         table: ChipTable = CHIP_TABLE) -> "CandidateBatch":
         space = tuple(space)
         chip_idx = table.indices([c.chip for c in space])
+        axes = [normalize_mesh(c.mesh) for c in space]   # (pod, data, model)
         return cls(
             candidates=space,
             chip_idx=chip_idx,
             n_chips=np.asarray([c.n_chips for c in space], np.int64),
-            mesh_data=np.asarray(
-                [c.mesh[-2] if len(c.mesh) >= 2 else 1 for c in space], np.int64),
-            mesh_model=np.asarray([c.mesh[-1] for c in space], np.int64),
+            mesh_data=np.asarray([a[1] for a in axes], np.int64),
+            mesh_model=np.asarray([a[2] for a in axes], np.int64),
             freq_mhz=np.asarray([c.freq_mhz for c in space], np.float64),
+            mesh_pod=np.asarray([a[0] for a in axes], np.int64),
             chip_cols=table.gather(chip_idx))
 
     def __len__(self) -> int:
@@ -87,6 +90,13 @@ class CandidateBatch:
 
     def __getitem__(self, i: int) -> Candidate:
         return self.candidates[i]
+
+    def pod_axis(self) -> np.ndarray:
+        """The leading (pod) mesh extents; all-ones for batches built before
+        the topology model (external constructors without ``mesh_pod``)."""
+        if self.mesh_pod is not None:
+            return self.mesh_pod
+        return np.ones(len(self), np.int64)
 
     def hbm_bytes(self, table: ChipTable = CHIP_TABLE) -> np.ndarray:
         """Per-candidate HBM capacity, from the gather cache when present."""
@@ -135,7 +145,10 @@ def _scale_analysis(base_analysis: Dict, base_chips: int, cand: Candidate) -> Di
     """First-order rescale of a compiled census to a different slice size.
 
     flops/bytes scale ~1/chips (data/model parallel split); collective bytes
-    grow with ring size: x (n-1)/n relative to base ring.
+    grow with ring size: x (n-1)/n relative to base ring.  Also emits
+    ``coll_payload_bytes`` — the payload with the base census's global ring
+    factor un-applied — which the topology-aware simulator splits across
+    mesh axes by its ``SimConfig.coll_model_frac``.
     """
     r = base_chips / cand.n_chips
     nb, nc = base_chips, cand.n_chips
@@ -145,6 +158,8 @@ def _scale_analysis(base_analysis: Dict, base_chips: int, cand: Candidate) -> Di
         "hbm_bytes": base_analysis["hbm_bytes"] * r,
         "collective_bytes": base_analysis["collective_bytes"] * r * ring,
         "wire_bytes": base_analysis["wire_bytes"] * r * ring,
+        "coll_payload_bytes":
+            base_analysis["wire_bytes"] * r / max((nb - 1) / nb, 1e-9),
     }
 
 
@@ -154,19 +169,22 @@ def _scale_analysis_batch(base_analysis: Dict, base_chips,
 
     ``base_analysis`` values and ``base_chips`` may themselves be arrays
     (broadcast against ``n_chips``) — that is how multi-workload sweeps tile
-    W workloads x N candidates into one flat batch.
+    W workloads x N candidates into one flat batch.  Emits the same
+    ``coll_payload_bytes`` as the scalar version, with identical IEEE
+    expressions so the scalar oracle matches bitwise.
     """
     base_chips = np.asarray(base_chips, np.float64)
     nc = np.asarray(n_chips, np.float64)
     r = base_chips / nc
-    ring = np.where(nc > 1,
-                    ((nc - 1) / nc) / np.maximum((base_chips - 1) / base_chips, 1e-9),
-                    0.0)
+    ring_base = np.maximum((base_chips - 1) / base_chips, 1e-9)
+    ring = np.where(nc > 1, ((nc - 1) / nc) / ring_base, 0.0)
     return {
         "flops": np.asarray(base_analysis["flops"]) * r,
         "hbm_bytes": np.asarray(base_analysis["hbm_bytes"]) * r,
         "collective_bytes": np.asarray(base_analysis["collective_bytes"]) * r * ring,
         "wire_bytes": np.asarray(base_analysis["wire_bytes"]) * r * ring,
+        "coll_payload_bytes":
+            np.asarray(base_analysis["wire_bytes"]) * r / ring_base,
     }
 
 
@@ -224,11 +242,15 @@ def evaluate_space(base_analysis: Dict, base_chips: int, batch: CandidateBatch,
                    sim: costmodel.SimConfig = costmodel.SimConfig()
                    ) -> costmodel.SimBatch:
     """Scale the base census to every candidate and simulate the whole space
-    in one vector pass."""
+    in one vector pass.  The batch's mesh axes feed the topology-aware
+    collective model, so same-chip-count factorizations score differently."""
     ana = _scale_analysis_batch(base_analysis, base_chips, batch.n_chips)
     return costmodel.simulate_batch(ana, batch.chip_idx, batch.n_chips,
                                     batch.freq_mhz, sim=sim,
-                                    gathered=batch.chip_cols)
+                                    gathered=batch.chip_cols,
+                                    mesh_pod=batch.pod_axis(),
+                                    mesh_data=batch.mesh_data,
+                                    mesh_model=batch.mesh_model)
 
 
 def evaluate_workload_tile(workload: "Workload", batch: CandidateBatch,
@@ -256,7 +278,10 @@ def evaluate_workload_tile(workload: "Workload", batch: CandidateBatch,
         ana = _scale_analysis_batch(workload.base_analysis, workload.base_chips,
                                     batch.n_chips)
         res = costmodel.simulate_batch_jit(ana, batch.chip_idx, batch.n_chips,
-                                           batch.freq_mhz, sim=sim)
+                                           batch.freq_mhz, sim=sim,
+                                           mesh_pod=batch.pod_axis(),
+                                           mesh_data=batch.mesh_data,
+                                           mesh_model=batch.mesh_model)
     else:
         res = evaluate_space(workload.base_analysis, workload.base_chips,
                              batch, sim=sim)
@@ -293,8 +318,10 @@ def slow_path_search_scalar(arch: str, shape_name: str, base_analysis: Dict,
                             space: SpaceLike,
                             constraint: Constraint = Constraint(),
                             objective: str = "energy") -> Tuple[Candidate, Dict, float]:
-    """The seed per-candidate Python loop, kept verbatim as the agreement
-    oracle for ``slow_path_search`` and the benchmark's scalar baseline."""
+    """The seed per-candidate Python loop, kept as the agreement oracle for
+    ``slow_path_search`` and the benchmark's scalar baseline.  Each candidate
+    passes its ``mesh`` into the scalar simulator, mirroring the batched
+    path's topology threading — scalar stays the ground truth."""
     if isinstance(space, CandidateBatch):
         space = space.candidates
     t0 = time.perf_counter()
@@ -302,7 +329,8 @@ def slow_path_search_scalar(arch: str, shape_name: str, base_analysis: Dict,
     for cand in space:
         chip = get_chip(cand.chip)
         ana = _scale_analysis(base_analysis, base_chips, cand)
-        res = costmodel.simulate(ana, chip, cand.n_chips, freq_mhz=cand.freq_mhz)
+        res = costmodel.simulate(ana, chip, cand.n_chips,
+                                 freq_mhz=cand.freq_mhz, mesh=cand.mesh)
         state_pd = state_gb_per_device * base_chips / cand.n_chips
         fits = state_pd * 1e9 <= chip.hbm_bytes * 0.9
         ok = ((not constraint.min_hbm_fit or fits)
@@ -478,7 +506,10 @@ def pareto_search(workloads: Union[Workload, Sequence[Workload]],
                 if batch.chip_cols is not None else None)
     sim = costmodel.simulate_batch(ana, tile(batch.chip_idx),
                                    tile(batch.n_chips), tile(batch.freq_mhz),
-                                   gathered=gathered)
+                                   gathered=gathered,
+                                   mesh_pod=tile(batch.pod_axis()),
+                                   mesh_data=tile(batch.mesh_data),
+                                   mesh_model=tile(batch.mesh_model))
     out = {}
     for wi, wl in enumerate(workloads):
         sl = slice(wi * n, (wi + 1) * n)

@@ -6,6 +6,9 @@ evaluated for all workloads (``dse.evaluate_workload_tile`` — the numpy
 simulator, its jitted variant, or the trained fast-path predictors), masked
 by the ``Constraint``, folded into each workload's ``StreamingFrontier``,
 and released.  Peak candidate memory is one tile regardless of space size.
+Tiles carry their mesh axes (pod/data/model) into the simulators, so the
+factorization axis of the space differentiates the frontier on every
+evaluator, not just the predictor fast path.
 
 Checkpointing is by tile index: the campaign state (spec, workloads,
 frontiers, trajectory, next tile) round-trips through JSON, so an
@@ -151,8 +154,19 @@ class Campaign:
         re-passing the SAME ``power_model``/``cycles_model`` via kwargs
         (``__init__`` refuses to resume without them); supplying retrained
         models would splice two predictors into one frontier undetected.
+        A checkpoint written under a different ``costmodel.SIM_MODEL_VERSION``
+        is refused for the same reason: its folded-in tiles and the tiles a
+        resume would evaluate come from incomparable cost models.
         """
         state = store.load_checkpoint(path)
+        ckpt_model = state.get("sim_model_version")
+        if ckpt_model != costmodel.SIM_MODEL_VERSION:
+            raise ValueError(
+                f"checkpoint {path} was written under cost-model version "
+                f"{ckpt_model!r} but this build is "
+                f"{costmodel.SIM_MODEL_VERSION}; resuming would splice two "
+                "incomparable cost models into one frontier — re-run the "
+                "campaign from scratch")
         workloads = [dse.Workload(arch=w["arch"], shape=w["shape"],
                                   base_analysis=w["base_analysis"],
                                   base_chips=w["base_chips"],
@@ -240,6 +254,7 @@ class Campaign:
     def state_dict(self) -> Dict:
         return {
             "version": 1,
+            "sim_model_version": costmodel.SIM_MODEL_VERSION,
             "space": self.space.to_dict(),
             "workloads": [{
                 "arch": wl.arch, "shape": wl.shape,

@@ -33,7 +33,8 @@ from typing import Dict, Iterator, Tuple
 import numpy as np
 
 from repro.core.dse import Candidate, CandidateBatch
-from repro.hw import CHIP_TABLE, CHIPS, ChipTable, mesh_factorizations
+from repro.hw import (CHIP_TABLE, CHIPS, ChipTable, mesh_factorizations,
+                      normalize_mesh)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,9 +66,11 @@ class SpaceSpec:
 
     ``chip_counts`` are slice sizes; every ``mesh_factorizations`` arrangement
     of each count enters the space (edge parts with ``ici_bw == 0`` collapse
-    to a single-chip 1x1 mesh).  ``freq_points`` is the per-row DVFS lattice
-    density.  Total size is ``rows * freq_points``; only the row table is
-    resident.
+    to a single-chip 1x1 mesh).  With ``mesh_dims=3`` the leading pod factor
+    is carried as the candidates' ``mesh_pod`` axis and priced by the
+    topology-aware collective model (it is no longer silently dropped).
+    ``freq_points`` is the per-row DVFS lattice density.  Total size is
+    ``rows * freq_points``; only the row table is resident.
     """
 
     chips: Tuple[str, ...] = tuple(CHIPS)
@@ -114,13 +117,13 @@ class SpaceSpec:
         scale = np.asarray([r.variant.freq_scale for r in rows], np.float64)
         # worst-bin derate shrinks the top of the band, clamped into it
         f_hi = np.clip(f_max * scale, f_min, f_max)
+        axes = [normalize_mesh(r.mesh) for r in rows]    # (pod, data, model)
         return {
             "chip_idx": chip_idx,
             "n_chips": np.asarray([r.n_chips for r in rows], np.int64),
-            "mesh_data": np.asarray(
-                [r.mesh[-2] if len(r.mesh) >= 2 else 1 for r in rows],
-                np.int64),
-            "mesh_model": np.asarray([r.mesh[-1] for r in rows], np.int64),
+            "mesh_pod": np.asarray([a[0] for a in axes], np.int64),
+            "mesh_data": np.asarray([a[1] for a in axes], np.int64),
+            "mesh_model": np.asarray([a[2] for a in axes], np.int64),
             "f_lo": f_min,
             "f_hi": f_hi,
         }
@@ -186,6 +189,7 @@ class SpaceSpec:
             mesh_data=cols["mesh_data"][row],
             mesh_model=cols["mesh_model"][row],
             freq_mhz=freq,
+            mesh_pod=cols["mesh_pod"][row],
             chip_cols=CHIP_TABLE.gather(chip_idx))
 
     def tiles(self, start_tile: int = 0, chunk_size: int = None

@@ -16,6 +16,7 @@ import os
 import platform
 from typing import Dict
 
+from repro.core.costmodel import SIM_MODEL_VERSION
 from repro.dse_campaign.frontier import candidate_to_dict
 
 CAMPAIGN_BENCH_NAME = "BENCH_dse_campaign.json"
@@ -69,6 +70,9 @@ def campaign_payload(result, space_dict: Dict, constraint: Dict,
         "bench": "dse_campaign",
         "seed": seed,
         "python": platform.python_version(),
+        # intentional cost-model changes bump this; the CI frontier compare
+        # only gates hypervolume between same-version artifacts
+        "sim_model_version": SIM_MODEL_VERSION,
         "space": space_dict,
         "constraint": constraint,
         "evaluator": evaluator,

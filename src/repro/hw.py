@@ -35,6 +35,9 @@ class ChipSpec:
     idle_watts: float           # static/idle power
     vmem_bytes: float           # on-chip vector memory
     mxu_dim: int = 128          # systolic array tile edge
+    ici_links_per_axis: int = 2  # usable links per mesh axis (2 = torus
+                                 # wraparound, both ring directions; 0 = none)
+    ici_hop_s: float = 1e-6     # per-hop ICI latency (one ring step), seconds
 
     def at_frequency(self, freq_mhz: float) -> "ChipSpec":
         """Return a derated/overclocked view of this chip at ``freq_mhz``.
@@ -124,6 +127,8 @@ CHIPS: Dict[str, ChipSpec] = {
         tdp_watts=15.0,
         idle_watts=2.5,
         vmem_bytes=16e6,
+        ici_links_per_axis=0,    # edge-class: no inter-chip links at all
+        ici_hop_s=0.0,
     ),
 }
 
@@ -137,7 +142,7 @@ DEFAULT_CHIP = "tpu-v5e"
 _TABLE_FIELDS = ("peak_flops_bf16", "hbm_bw", "hbm_bytes", "ici_bw",
                  "ici_links", "nominal_freq_mhz", "min_freq_mhz",
                  "max_freq_mhz", "tdp_watts", "idle_watts", "vmem_bytes",
-                 "mxu_dim")
+                 "mxu_dim", "ici_links_per_axis", "ici_hop_s")
 
 
 @dataclasses.dataclass(frozen=True, eq=False)  # eq=False: ndarray fields
@@ -158,6 +163,8 @@ class ChipTable:
     idle_watts: np.ndarray
     vmem_bytes: np.ndarray
     mxu_dim: np.ndarray
+    ici_links_per_axis: np.ndarray
+    ici_hop_s: np.ndarray
 
     @classmethod
     def from_chips(cls, chips: Dict[str, ChipSpec]) -> "ChipTable":
@@ -221,6 +228,99 @@ def frequency_sweep(name: str = DEFAULT_CHIP, points: int = 12) -> list:
     """DVFS sweep analogous to the paper's 397-1590 MHz V100S sweep."""
     spec = CHIPS[name]
     return frequency_lattice(spec.min_freq_mhz, spec.max_freq_mhz, points)
+
+
+# --- Topology / link model ----------------------------------------------------
+# The collective-time model is topology-aware: a mesh axis of extent k forms a
+# bidirectional ring.  Axes with extent >= 3 close the ring with a torus
+# wraparound link (both directions usable -> 2 links per axis); extent-2 axes
+# are a line (the wrap link would parallel the direct link -> 1 link); and the
+# chip's total link budget caps what concurrent axes can use, so e.g. a 3D
+# mesh on a 4-link v5e degrades to 1 link/axis while a 6-link v5p keeps 2.
+# Edge-class chips (``ici_links_per_axis == 0``) have no usable axis links.
+# Everything here is written against a numpy-compatible array namespace ``xp``
+# so the scalar simulator, ``simulate_batch`` and its jit variant share the
+# exact same arithmetic.
+
+
+def normalize_mesh(mesh) -> Tuple[int, int, int]:
+    """A mesh tuple -> (pod, data, model) axis extents.
+
+    The trailing two extents are the (data, model) axes (matching
+    ``features.extract``'s reading of ``mesh_shape``); any leading extents
+    collapse into a single pod axis.  1D meshes are (1, 1, model)."""
+    mesh = tuple(int(m) for m in mesh)
+    if not mesh or any(m < 1 for m in mesh):
+        raise ValueError(f"mesh extents must be >= 1, got {mesh}")
+    model = mesh[-1]
+    data = mesh[-2] if len(mesh) >= 2 else 1
+    pod = 1
+    for m in mesh[:-2]:
+        pod *= m
+    return pod, data, model
+
+
+def axis_link_counts(mesh_pod, mesh_data, mesh_model, ici_links,
+                     links_per_axis, xp=np):
+    """Usable links per (pod, data, model) axis, vectorized over candidates.
+
+    want(k) = 2 for a torus ring (k >= 3), 1 for a 2-chip line, 0 for an
+    inactive axis; the per-axis budget ``ici_links // n_active_axes`` (floored
+    at 1) models sharing the chip's link complement across concurrently
+    active axes.  All-float arithmetic so numpy float64 and jax float32
+    agree elementwise with the scalar path."""
+    kp = xp.asarray(mesh_pod) * 1.0
+    kd = xp.asarray(mesh_data) * 1.0
+    km = xp.asarray(mesh_model) * 1.0
+    per_axis = xp.asarray(links_per_axis) * 1.0
+    total = xp.asarray(ici_links) * 1.0
+    n_active = ((kp > 1) * 1.0 + (kd > 1) * 1.0 + (km > 1) * 1.0)
+    budget = xp.maximum(xp.floor(total / xp.maximum(n_active, 1.0)), 1.0)
+
+    def links(k):
+        want = xp.where(k >= 3, 2.0, xp.where(k >= 2, 1.0, 0.0))
+        return xp.minimum(xp.minimum(want, per_axis), budget)
+
+    return links(kp), links(kd), links(km)
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Per-axis interconnect view of one mesh on one chip.
+
+    ``links[i]`` is the usable link count of axis i under the chip's budget,
+    ``wraparound[i]`` whether the axis closes into a torus ring, ``hops[i]``
+    the worst-case hop count (ring diameter) along the axis."""
+
+    chip: str
+    mesh: Tuple[int, ...]
+    links: Tuple[int, ...]
+    wraparound: Tuple[bool, ...]
+    hops: Tuple[int, ...]
+
+    @property
+    def n_chips(self) -> int:
+        n = 1
+        for m in self.mesh:
+            n *= m
+        return n
+
+
+def topology_for(chip: ChipSpec, mesh) -> Topology:
+    """The ``Topology`` of ``mesh`` on ``chip`` (scalar view of the link
+    model the batched simulators apply via ``axis_link_counts``)."""
+    pod, data, model = normalize_mesh(mesh)
+    lp, ld, lm = axis_link_counts(pod, data, model, chip.ici_links,
+                                  chip.ici_links_per_axis)
+    links, wraps, hops = [], [], []
+    for k, l in zip((pod, data, model), (lp, ld, lm)):
+        wrap = k >= 3 and chip.ici_links_per_axis >= 2
+        links.append(int(l))
+        wraps.append(bool(wrap))
+        hops.append(0 if k <= 1 else (k // 2 if wrap else k - 1))
+    return Topology(chip=chip.name, mesh=(pod, data, model),
+                    links=tuple(links), wraparound=tuple(wraps),
+                    hops=tuple(hops))
 
 
 def mesh_factorizations(n_chips: int, dims: int = 2) -> Tuple[Tuple[int, ...], ...]:

@@ -104,7 +104,9 @@ def reanalyze(tag: str) -> dict:
                    "wire_bytes", "op_counts", "hbm_by_opcode", "collectives",
                    "loops", "n_computations", "kernel_substitution")}
     art["roofline"] = costmodel.roofline_terms(analysis, chip, n_chips)
-    art["sim"] = costmodel.simulate(analysis, chip, n_chips).as_dict()
+    mesh_shape = tuple(int(d) for d in art["mesh"].split("x"))
+    art["sim"] = costmodel.simulate(analysis, chip, n_chips,
+                                    mesh=mesh_shape).as_dict()
     hlo_flops_global = analysis["flops"] * n_chips
     art["useful_flops_ratio"] = (art["model_flops"] / hlo_flops_global
                                  if hlo_flops_global else 0.0)

@@ -188,7 +188,8 @@ def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
     analysis["kernel_substitution"] = subst
     chip = get_chip(chip_name)
     roof = costmodel.roofline_terms(analysis, chip, n_chips)
-    sim = costmodel.simulate(analysis, chip, n_chips)
+    sim = costmodel.simulate(analysis, chip, n_chips,
+                             mesh=mesh.devices.shape)
 
     mf = cfg.model_flops(shape)
     hlo_flops_global = analysis["flops"] * n_chips

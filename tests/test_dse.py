@@ -27,7 +27,7 @@ def test_simulate_batch_matches_scalar_over_default_space():
     for i, cand in enumerate(batch.candidates):
         ref = costmodel.simulate(
             dse._scale_analysis(BASE, BASE_CHIPS, cand), get_chip(cand.chip),
-            cand.n_chips, freq_mhz=cand.freq_mhz)
+            cand.n_chips, freq_mhz=cand.freq_mhz, mesh=cand.mesh)
         got = res.result(i)
         for field in ("t_compute", "t_memory", "t_collective", "latency_s",
                       "cycles", "utilization", "power_w", "energy_j"):

@@ -354,6 +354,50 @@ def test_campaign_matches_oneshot_pareto_per_workload():
         assert_fronts_identical(result.frontiers[key], front)
 
 
+def test_compare_campaigns_hv_threshold():
+    """CI's cross-PR frontier gate: small hv drift passes, a collapse fails,
+    added/dropped workloads are reported but never gated."""
+    from benchmarks.compare_campaign import compare_campaigns
+
+    def payload(hv_by_key, n_points=3, size=100, version=2):
+        return {
+            "space": {"size": size},
+            "sim_model_version": version,
+            "frontiers": {k: {"points": [{}] * n_points} for k in hv_by_key},
+            "trajectory": {k: [{"hypervolume": hv * 0.5},
+                               {"hypervolume": hv}]
+                           for k, hv in hv_by_key.items()},
+        }
+
+    prev = payload({"a|s": 100.0, "b|s": 50.0})
+    ok, lines = compare_campaigns(prev, payload({"a|s": 98.0, "b|s": 50.0}))
+    assert ok and any("ok" in ln for ln in lines)
+    ok, _ = compare_campaigns(prev, payload({"a|s": 80.0, "b|s": 50.0}))
+    assert not ok                                     # 20% hv loss > 5% tol
+    ok, _ = compare_campaigns(prev, payload({"a|s": 80.0, "b|s": 50.0}),
+                              hv_rel_tol=0.25)
+    assert ok                                         # within loosened tol
+    ok, lines = compare_campaigns(prev, payload({"a|s": 100.0, "c|s": 1.0}))
+    assert ok                                         # add/drop not gated
+    assert any("NEW workload" in ln for ln in lines)
+    assert any("DROPPED" in ln for ln in lines)
+    # a cost-model version bump makes hv incomparable: report, don't gate
+    ok, lines = compare_campaigns(payload({"a|s": 100.0}, version=1),
+                                  payload({"a|s": 10.0}, version=2))
+    assert ok
+    assert any("not gated" in ln for ln in lines)
+    ok, _ = compare_campaigns({}, payload({"a|s": 1.0}))
+    assert ok                                         # empty previous passes
+
+
+def test_compare_campaign_main_missing_prev(tmp_path):
+    from benchmarks.compare_campaign import main
+    new = tmp_path / "new.json"
+    new.write_text(json.dumps({"space": {}, "frontiers": {},
+                               "trajectory": {}}))
+    assert main([str(tmp_path / "absent.json"), str(new)]) == 0
+
+
 def test_campaign_report_payload_shape(tmp_path):
     spec = small_spec(chunk_size=48)
     cons = dse.Constraint(max_power_w=40_000, min_hbm_fit=False)

@@ -72,7 +72,8 @@ def test_dse_fast_path_agrees_with_slow_path():
     for c in space:
         chip = get_chip(c.chip)
         ana = dse._scale_analysis(base, 256, c)
-        r = costmodel.simulate(ana, chip, c.n_chips, freq_mhz=c.freq_mhz)
+        r = costmodel.simulate(ana, chip, c.n_chips, freq_mhz=c.freq_mhz,
+                               mesh=c.mesh)
         X.append(features.extract(cfg, shape, chip, c.n_chips, c.mesh, c.freq_mhz))
         yp.append(r.power_w)
         yc.append(r.cycles)
@@ -86,7 +87,7 @@ def test_dse_fast_path_agrees_with_slow_path():
         "qwen3_14b", "train_4k", rf, knn, space, cons, verify_top_k=5,
         slow_verify=lambda c: costmodel.simulate(
             dse._scale_analysis(base, 256, c), get_chip(c.chip), c.n_chips,
-            freq_mhz=c.freq_mhz))
+            freq_mhz=c.freq_mhz, mesh=c.mesh))
     e_slow = results[best_slow]["sim"].energy_j
     e_fast = results[best_fast]["sim"].energy_j
     assert e_fast <= e_slow * 1.10, (e_slow, e_fast)

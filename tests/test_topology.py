@@ -1,0 +1,301 @@
+"""Topology-aware collective model tests: per-axis link/wraparound/hop
+semantics, factorization signal (same-count meshes -> distinct t_collective),
+scalar/batch/jit parity across tile sizes, pod-axis plumbing, and the
+deprecated ``links_used`` fallback shim."""
+
+import itertools
+import warnings
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised on bare installs
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import costmodel, dse
+from repro.dse_campaign import SpaceSpec, StreamingFrontier, frontiers_identical
+from repro.hw import (CHIPS, axis_link_counts, get_chip, mesh_factorizations,
+                      normalize_mesh, topology_for)
+
+# collective-heavy census: wire bytes dominate so the factorization axis
+# carries a visible latency/energy signal
+COLL_HEAVY = {"flops": 1e13, "hbm_bytes": 1e12, "collective_bytes": 5e12,
+              "wire_bytes": 7e12}
+BASE_CHIPS = 256
+WL = dse.Workload("qwen3_14b", "train_4k", COLL_HEAVY, BASE_CHIPS, 0.1)
+CONS = dse.Constraint(max_power_w=60_000, min_hbm_fit=False)
+
+
+def scalar_sim(cand: dse.Candidate) -> costmodel.SimResult:
+    return costmodel.simulate(
+        dse._scale_analysis(COLL_HEAVY, BASE_CHIPS, cand),
+        get_chip(cand.chip), cand.n_chips, freq_mhz=cand.freq_mhz,
+        mesh=cand.mesh)
+
+
+# --- hw.Topology: link counts, wraparound, hops -------------------------------
+
+
+def test_topology_v5e_2d_full_links():
+    t = topology_for(get_chip("tpu-v5e"), (8, 8))
+    assert t.mesh == (1, 8, 8)
+    assert t.links == (0, 2, 2)          # 4 links / 2 active axes = 2 each
+    assert t.wraparound == (False, True, True)
+    assert t.hops == (0, 4, 4)           # torus diameter k//2
+
+
+def test_topology_extent2_axis_is_a_line():
+    t = topology_for(get_chip("tpu-v5e"), (2, 32))
+    assert t.links[1] == 1               # no wrap on a 2-chip axis
+    assert t.wraparound[1] is False
+    assert t.hops[1] == 1
+    assert t.links[2] == 2 and t.wraparound[2] is True
+
+
+def test_topology_link_budget_degrades_3d_on_v5e():
+    """v5e has 4 links: a 3D mesh (3 active axes) degrades to 1 link/axis,
+    while 6-link v4/v5p keep 2 on the non-line axes."""
+    v5e = topology_for(get_chip("tpu-v5e"), (4, 4, 4))
+    assert v5e.links == (1, 1, 1)
+    v5p = topology_for(get_chip("tpu-v5p"), (4, 4, 4))
+    assert v5p.links == (2, 2, 2)
+
+
+def test_topology_edge_chip_has_no_links():
+    t = topology_for(get_chip("tpu-edge"), (1, 1))
+    assert t.links == (0, 0, 0)
+    assert t.hops == (0, 0, 0)
+
+
+def test_normalize_mesh():
+    assert normalize_mesh((16,)) == (1, 1, 16)
+    assert normalize_mesh((4, 8)) == (1, 4, 8)
+    assert normalize_mesh((2, 4, 8)) == (2, 4, 8)
+    assert normalize_mesh((2, 2, 4, 8)) == (4, 4, 8)   # leading axes collapse
+    with pytest.raises(ValueError):
+        normalize_mesh((0, 4))
+    with pytest.raises(ValueError):
+        normalize_mesh(())
+
+
+def test_axis_link_counts_vectorized_matches_scalar():
+    chips = [CHIPS[n] for n in ("tpu-v5e", "tpu-v5p", "tpu-v4", "tpu-edge")]
+    meshes = [(1, 1, 16), (1, 2, 8), (1, 4, 4), (2, 2, 4), (2, 4, 8)]
+    cases = list(itertools.product(chips, meshes))
+    lp, ld, lm = axis_link_counts(
+        np.asarray([m[0] for _, m in cases]),
+        np.asarray([m[1] for _, m in cases]),
+        np.asarray([m[2] for _, m in cases]),
+        np.asarray([c.ici_links for c, _ in cases], np.float64),
+        np.asarray([c.ici_links_per_axis for c, _ in cases], np.float64))
+    for i, (chip, mesh) in enumerate(cases):
+        t = topology_for(chip, mesh)
+        assert (int(lp[i]), int(ld[i]), int(lm[i])) == t.links, (chip.name, mesh)
+
+
+# --- factorization signal: same chip count, distinct t_collective -------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from([16, 32, 64, 128, 256, 1024]),
+       st.sampled_from(["tpu-v5e", "tpu-v5p", "tpu-v4"]),
+       st.sampled_from([2, 3]))
+def test_same_count_factorizations_distinct_t_coll(n_chips, chip, dims):
+    """Every mesh factorization of the same chip count prices differently on
+    the collective-heavy workload — the axis the mesh-agnostic model zeroed."""
+    meshes = mesh_factorizations(n_chips, dims)
+    if len(meshes) < 2:
+        return
+    t_colls = {}
+    for mesh in meshes:
+        cand = dse.Candidate(chip, n_chips, mesh, CHIPS[chip].max_freq_mhz)
+        t_colls[mesh] = scalar_sim(cand).t_collective
+    assert all(t > 0 for t in t_colls.values())
+    vals = list(t_colls.values())
+    assert len(set(vals)) == len(vals), t_colls    # pairwise distinct
+    # ...and the signal reaches the ranking objective, not just the term
+    energies = {m: scalar_sim(
+        dse.Candidate(chip, n_chips, m, CHIPS[chip].max_freq_mhz)).energy_j
+        for m in meshes}
+    assert len(set(energies.values())) == len(meshes), energies
+
+
+def test_legacy_model_tied_where_topology_differentiates():
+    """The before/after of the refactor: mesh-less simulate ties all
+    factorizations of 64 chips; the topology model separates them."""
+    legacy, topo = set(), set()
+    for mesh in mesh_factorizations(64, 2):
+        cand = dse.Candidate("tpu-v5e", 64, mesh, 1600.0)
+        ana = dse._scale_analysis(COLL_HEAVY, BASE_CHIPS, cand)
+        chip = get_chip("tpu-v5e")
+        legacy.add(costmodel.simulate(ana, chip, 64, 1600.0).t_collective)
+        topo.add(costmodel.simulate(ana, chip, 64, 1600.0,
+                                    mesh=cand.mesh).t_collective)
+    assert len(legacy) == 1                      # the old tie
+    assert len(topo) == len(mesh_factorizations(64, 2))
+
+
+# --- scalar == batch == jit across chunk sizes --------------------------------
+
+
+def space_3d(**kw):
+    kw.setdefault("chips", ("tpu-v5e", "tpu-v5p", "tpu-edge"))
+    kw.setdefault("chip_counts", (16, 64))
+    kw.setdefault("freq_points", 5)
+    kw.setdefault("mesh_dims", 3)
+    return SpaceSpec(**kw)
+
+
+@pytest.mark.parametrize("chunk", [1, 7, 4096])
+def test_batch_scalar_topology_parity_across_chunks(chunk):
+    """Tile-streamed simulate_batch must equal the scalar oracle bitwise for
+    every candidate, for any chunk size, pod axes included."""
+    spec = space_3d()
+    for t, lo, batch in spec.tiles(chunk_size=chunk):
+        sim, _ = dse.evaluate_workload_tile(WL, batch, CONS)
+        for i, cand in enumerate(batch.candidates):
+            ref = scalar_sim(cand)
+            # collective term and latency are the same float64 expressions ->
+            # bitwise; energy keeps the documented <=1-ulp pow()-vs-**3
+            # residual of the power model
+            assert float(sim.t_collective[i]) == ref.t_collective, cand
+            assert float(sim.latency_s[i]) == ref.latency_s, cand
+            assert abs(float(sim.energy_j[i]) - ref.energy_j) <= (
+                4e-16 * abs(ref.energy_j)), cand
+
+
+def test_jit_topology_parity():
+    spec = space_3d()
+    batch = spec.slice(0, len(spec))
+    ref, _ = dse.evaluate_workload_tile(WL, batch, CONS)
+    jit, _ = dse.evaluate_workload_tile(WL, batch, CONS, engine="jit")
+    np.testing.assert_allclose(np.asarray(jit.t_collective),
+                               np.asarray(ref.t_collective), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(jit.energy_j),
+                               np.asarray(ref.energy_j), rtol=1e-5)
+
+
+def test_pod_axis_flows_through_spacespec():
+    """mesh_dims=3 rows carry their leading (pod) factor into the batch and
+    the simulator prices it (satellite fix: the pod axis used to be dropped)."""
+    spec = space_3d(chips=("tpu-v5p",), chip_counts=(64,))
+    batch = spec.slice(0, len(spec))
+    assert batch.mesh_pod is not None
+    for i, cand in enumerate(batch.candidates):
+        pod = int(np.prod(cand.mesh[:-2])) if len(cand.mesh) > 2 else 1
+        assert int(batch.mesh_pod[i]) == pod
+        assert pod * batch.mesh_data[i] * batch.mesh_model[i] == cand.n_chips
+    # a 3D mesh must not collapse onto its pod-dropped sibling: the same
+    # scaled census priced at (2, 4, 8) vs (1, 4, 8) must differ — this is
+    # the exact regression (leading pod factor silently ignored) being fixed
+    c3 = dse.Candidate("tpu-v5p", 64, (2, 4, 8), 1750.0)
+    ana = dse._scale_analysis(COLL_HEAVY, BASE_CHIPS, c3)
+    chip = get_chip("tpu-v5p")
+    with_pod = costmodel.simulate(ana, chip, 64, 1750.0, mesh=(2, 4, 8))
+    pod_dropped = costmodel.simulate(ana, chip, 64, 1750.0, mesh=(1, 4, 8))
+    assert with_pod.t_collective != pod_dropped.t_collective
+    assert scalar_sim(c3).t_collective == with_pod.t_collective
+
+
+def test_streamed_equals_oneshot_under_topology_model():
+    """Frontier identity (the campaign acceptance gate) holds with the
+    topology model on a 3D-mesh space."""
+    spec = space_3d()
+    fr = StreamingFrontier()
+    for t, lo, batch in spec.tiles(chunk_size=48):
+        sim, feas = dse.evaluate_workload_tile(WL, batch, CONS)
+        fr.merge(batch.candidates, sim.energy_j, sim.latency_s, feas,
+                 indices=np.arange(lo, lo + len(batch)), tile=t)
+    oneshot = dse.pareto_search(WL, spec.slice(0, len(spec)), CONS)[
+        ("qwen3_14b", "train_4k")]
+    assert frontiers_identical(fr.as_pareto_frontier(WL), oneshot)
+
+
+def test_campaign_frontier_contains_mesh_differentiated_points():
+    """With the topology model the frontier resolves mesh ties: frontier
+    members carry definite meshes and same-(chip, count) duplicates with
+    equal scores are gone for collective-heavy workloads."""
+    spec = space_3d(chips=("tpu-v5e", "tpu-v5p"))
+    front = dse.pareto_search(WL, spec.slice(0, len(spec)), CONS)[
+        ("qwen3_14b", "train_4k")]
+    assert len(front) >= 1
+    seen = {}
+    for c, e, l in zip(front.candidates, front.energy_j, front.latency_s):
+        key = (c.chip, c.n_chips, c.freq_mhz, float(e), float(l))
+        assert key not in seen or seen[key] == c.mesh, (
+            "same-count mesh factorizations still tie on the frontier", key)
+        seen[key] = c.mesh
+
+
+# --- deprecated links_used shim -----------------------------------------------
+
+
+def test_links_used_deprecation_warning():
+    with pytest.warns(DeprecationWarning, match="links_used is deprecated"):
+        costmodel.SimConfig(links_used=4)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")           # default value stays silent
+        costmodel.SimConfig()
+
+
+def test_links_used_still_drives_meshless_fallback():
+    """Old behaviour is preserved verbatim when no mesh is given: t_coll
+    scales with 1/links_used."""
+    ana = {"flops": 1e12, "hbm_bytes": 1e10, "wire_bytes": 4e11,
+           "collective_bytes": 3e11}
+    chip = get_chip("tpu-v5e")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        s1 = costmodel.SimConfig(links_used=1)
+        s4 = costmodel.SimConfig(links_used=4)
+    r1 = costmodel.simulate(ana, chip, 16, sim=s1)
+    r4 = costmodel.simulate(ana, chip, 16, sim=s4)
+    assert r1.t_collective == 4e11 / chip.ici_bw
+    assert r4.t_collective == r1.t_collective / 4
+    # the topology path ignores the deprecated knob entirely
+    t1 = costmodel.simulate(ana, chip, 16, sim=s1, mesh=(4, 4))
+    t4 = costmodel.simulate(ana, chip, 16, sim=s4, mesh=(4, 4))
+    assert t1.t_collective == t4.t_collective
+
+
+def test_old_checkpoint_sim_dict_still_loads():
+    """A pre-topology checkpoint's SimConfig payload (no coll_model_frac)
+    reconstructs, keeping old campaign checkpoints loadable."""
+    old = {"overlap": 0.8, "w_mxu": 0.55, "w_hbm": 0.30, "w_ici": 0.15,
+           "links_used": 2}
+    sim = costmodel.SimConfig(**old)
+    assert sim.coll_model_frac == costmodel.COLL_MODEL_FRAC
+    assert sim == costmodel.SimConfig()
+
+
+def test_cross_model_checkpoint_resume_refused(tmp_path):
+    """Resuming a checkpoint written under a different cost-model version
+    would splice incomparable frontiers — ``from_checkpoint`` must refuse
+    (pre-topology checkpoints carry no ``sim_model_version`` at all)."""
+    import json
+
+    from repro.dse_campaign import Campaign
+    from repro.dse_campaign.space import SpaceSpec
+
+    spec = SpaceSpec(chips=("tpu-v5e",), chip_counts=(16,), freq_points=3,
+                     chunk_size=16)
+    camp = Campaign([WL], spec)
+    camp.run(max_tiles=1)
+    state = camp.state_dict()
+    assert state["sim_model_version"] == costmodel.SIM_MODEL_VERSION
+
+    path = tmp_path / "ckpt.json"
+    path.write_text(json.dumps(state))
+    resumed = Campaign.from_checkpoint(str(path))   # same version: fine
+    assert resumed.next_tile == 1
+
+    state["sim_model_version"] = costmodel.SIM_MODEL_VERSION - 1
+    path.write_text(json.dumps(state))
+    with pytest.raises(ValueError, match="cost-model version"):
+        Campaign.from_checkpoint(str(path))
+    del state["sim_model_version"]                  # pre-topology checkpoint
+    path.write_text(json.dumps(state))
+    with pytest.raises(ValueError, match="cost-model version"):
+        Campaign.from_checkpoint(str(path))
