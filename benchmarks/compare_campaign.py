@@ -11,6 +11,14 @@ them, while a hypervolume collapse on an unchanged model is a real bug.
 
 A missing/unreadable PREV (first run, expired artifact) is a clean pass so
 the step can be wired unconditionally into CI.
+
+A second mode diffs the fused evaluators WITHIN one run's
+``BENCH_evaluator_speedup.json``: the Pallas kernel frontier against the
+fused ``"jit"`` frontier (float64-interpret vs float32 — candidate-set
+drift is reported, hypervolume divergence beyond ``--evaluator-hv-tol``
+gates) plus the artifact's recorded pallas-vs-numpy identity verdict:
+
+  python -m benchmarks.compare_campaign --evaluators BENCH_evaluator_speedup.json
 """
 
 from __future__ import annotations
@@ -73,13 +81,85 @@ def compare_campaigns(prev: Dict, new: Dict,
     return ok, lines
 
 
+def point_key(p: Dict) -> Tuple:
+    return (p["chip"], p["n_chips"], tuple(p["mesh"]), p["freq_mhz"],
+            p["index"])
+
+
+def compare_evaluators(payload: Dict,
+                       hv_rel_tol: float = 1e-3) -> Tuple[bool, List[str]]:
+    """(ok, report lines) for one run's pallas-vs-jit evaluator frontiers.
+
+    The two fused evaluators run different precisions (float64 interpret vs
+    float32), so exact candidate-set equality is reported, not required;
+    ``ok`` is False when a workload's pallas/jit hypervolumes diverge by
+    more than ``hv_rel_tol`` relative, or when the artifact records that
+    the pallas frontier failed to reproduce the numpy evaluator's candidate
+    set (the hard identity the acceptance gate demands)."""
+    lines, ok = [], True
+    fronts = payload.get("frontiers", {})
+    hv = payload.get("hv", {})
+    jf, pf = fronts.get("jit", {}), fronts.get("pallas", {})
+    for key in sorted(set(jf) | set(pf)):
+        a = {point_key(p) for p in jf.get(key, {}).get("points", [])}
+        b = {point_key(p) for p in pf.get(key, {}).get("points", [])}
+        hj = hv.get("jit", {}).get(key)
+        hp = hv.get("pallas", {}).get(key)
+        if hj is None or hp is None:
+            # one evaluator missing the workload entirely is a divergence
+            rel = 0.0 if hj == hp else float("inf")
+        elif hj == 0.0:
+            # a collapsed jit hv must not mask a positive pallas hv
+            rel = 0.0 if hp == 0.0 else float("inf")
+        else:
+            rel = abs(hp - hj) / abs(hj)
+        tag = "ok"
+        if rel > hv_rel_tol:
+            tag = f"DIVERGED (> {hv_rel_tol:.0e} hv)"
+            ok = False
+        lines.append(f"{key}: pallas {len(b)} vs jit {len(a)} frontier "
+                     f"points, {len(a & b)} shared; hv rel diff {rel:.2e}  "
+                     f"[{tag}]")
+    pvn = payload.get("pallas_vs_numpy", {})
+    lines.append(f"pallas vs numpy: identical candidate set = "
+                 f"{pvn.get('identical_candidate_set')}, max hv rel diff = "
+                 f"{pvn.get('max_hv_rel_diff', float('nan')):.2e}")
+    if not pvn.get("identical_candidate_set", False):
+        lines.append("pallas frontier failed numpy identity")
+        ok = False
+    speedup = payload.get("speedup_pallas_vs_jit_baseline")
+    if speedup is not None:
+        lines.append(f"fused pallas speedup vs jit baseline: {speedup:.2f}x")
+    return ok, lines
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("prev", help="previous BENCH_dse_campaign.json")
-    ap.add_argument("new", help="current BENCH_dse_campaign.json")
+    ap.add_argument("prev", nargs="?", help="previous BENCH_dse_campaign.json")
+    ap.add_argument("new", nargs="?", help="current BENCH_dse_campaign.json")
     ap.add_argument("--hv-rel-tol", type=float, default=0.05,
                     help="max allowed relative hypervolume regression")
+    ap.add_argument("--evaluators", metavar="PATH",
+                    help="BENCH_evaluator_speedup.json to self-diff (pallas "
+                         "vs jit frontiers) instead of a prev/new compare")
+    ap.add_argument("--evaluator-hv-tol", type=float, default=1e-3,
+                    help="max pallas-vs-jit relative hypervolume divergence")
     args = ap.parse_args(argv)
+    if args.evaluators:
+        try:
+            with open(args.evaluators) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[compare_campaign] no usable evaluator artifact "
+                  f"({args.evaluators}: {e}); skipping compare")
+            return 0
+        ok, lines = compare_evaluators(payload, args.evaluator_hv_tol)
+        for ln in lines:
+            print(f"[compare_campaign] {ln}")
+        print(f"[compare_campaign] {'PASS' if ok else 'FAIL: evaluator frontiers diverged'}")
+        return 0 if ok else 1
+    if not args.prev or not args.new:
+        ap.error("prev and new artifacts required (or use --evaluators)")
     try:
         with open(args.prev) as f:
             prev = json.load(f)

@@ -7,9 +7,13 @@ instead of restarting.  This demo runs a campaign over all cached dry-run
 workloads, kills it mid-sweep, resumes from the checkpoint, and shows the
 final frontier is IDENTICAL to an uninterrupted fresh run.
 
-  PYTHONPATH=src python examples/dse_campaign_resume.py
+  PYTHONPATH=src python examples/dse_campaign_resume.py [--evaluator pallas]
+
+``--evaluator`` selects the tile engine (numpy / jit / pallas); CI runs the
+pallas-interpret variant in its gating matrix as the fused-kernel smoke.
 """
 
+import argparse
 import os
 import tempfile
 
@@ -21,11 +25,17 @@ ART = os.path.join(os.getcwd(), "experiments", "dryrun")
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--evaluator", default="numpy",
+                    choices=("numpy", "jit", "pallas"))
+    args = ap.parse_args()
     spec = tiny_campaign_space(chunk_size=128)
     cons = dse.Constraint(max_power_w=40_000, min_hbm_fit=False)
     ckpt = os.path.join(tempfile.mkdtemp(prefix="dse_campaign_"), "ckpt.json")
 
-    campaign = Campaign.from_artifacts(ART, spec, constraint=cons)
+    campaign = Campaign.from_artifacts(ART, spec, constraint=cons,
+                                       evaluator=args.evaluator)
+    print(f"evaluator: {args.evaluator}")
     n_tiles = spec.n_tiles()
     cut = n_tiles // 2
     print(f"space: {len(spec)} candidates in {n_tiles} tiles of "
@@ -43,7 +53,8 @@ if __name__ == "__main__":
     final = resumed.run(checkpoint_path=ckpt)
     assert final.complete
 
-    fresh = Campaign.from_artifacts(ART, spec, constraint=cons).run()
+    fresh = Campaign.from_artifacts(ART, spec, constraint=cons,
+                                    evaluator=args.evaluator).run()
     identical = all(frontiers_identical(final.frontiers[k], fresh.frontiers[k])
                     for k in fresh.frontiers)
     print(f"\nresumed final frontier == uninterrupted fresh run: {identical}")

@@ -364,6 +364,309 @@ def simulate_batch(analysis: Dict, chip_idx, n_chips,
         bottleneck_idx=dom)
 
 
+def scale_census(base_analysis: Dict, base_chips, n_chips, xp=np) -> Dict:
+    """First-order rescale of a compiled census to other slice sizes, xp-generic.
+
+    The single home of the scaling arithmetic shared by
+    ``dse._scale_analysis_batch`` (numpy float64), the fused jit sweep below,
+    and the Pallas DSE-sweep kernel — identical IEEE expressions in every
+    path, so the float64 variants agree bitwise with the scalar oracle.
+    flops/bytes scale ~1/chips; collective bytes ride the ring factor; the
+    emitted ``coll_payload_bytes`` un-applies the base census's global ring
+    factor so the topology-aware simulator can split it per mesh axis.
+    """
+    bc = xp.asarray(base_chips) * 1.0
+    nc = xp.asarray(n_chips) * 1.0
+    r = bc / nc
+    ring_base = xp.maximum((bc - 1.0) / bc, 1e-9)
+    ring = xp.where(nc > 1, ((nc - 1.0) / nc) / ring_base, 0.0)
+    return {
+        "flops": xp.asarray(base_analysis["flops"]) * r,
+        "hbm_bytes": xp.asarray(base_analysis["hbm_bytes"]) * r,
+        "collective_bytes":
+            xp.asarray(base_analysis["collective_bytes"]) * r * ring,
+        "wire_bytes": xp.asarray(base_analysis["wire_bytes"]) * r * ring,
+        "coll_payload_bytes":
+            xp.asarray(base_analysis["wire_bytes"]) * r / ring_base,
+    }
+
+
+# --- Fused sweep reduction (per-tile skyline pre-reduction) -------------------
+# A campaign tile's full energy/latency arrays exist only so the streaming
+# frontier can discard >99% of them.  The helpers below move that discard on
+# device: the constraint-feasible Pareto survivors of the tile plus the scalar
+# aggregates the frontier accounting needs (feasible count, feasible maxima
+# for the hypervolume reference point) are everything the host has to see —
+# O(survivors) transfer instead of O(tile).  ``skyline_reduce`` is xp-generic
+# so the numpy reference, the jit reference path and the Pallas kernel all
+# reduce with the same arithmetic, and the surviving mask provably equals
+# ``dse.pareto_mask`` on the feasible subset (same sort keys, same strict /
+# group-minimum survival rule, infeasible rows pushed to +inf keys).
+
+# chip-table columns the fused sweep gathers: the simulate set plus the HBM
+# capacity the feasibility check reads
+SWEEP_GATHER_FIELDS = SIM_GATHER_FIELDS + ("hbm_bytes",)
+
+# per-workload scalar column order of the packed [W, 6] workload matrix
+WL_COLS = ("flops", "hbm_bytes", "collective_bytes", "wire_bytes",
+           "base_chips", "state_gb_per_device")
+
+
+def _cummin(x, xp):
+    if xp is np:
+        return np.minimum.accumulate(x)
+    import jax.lax
+    return jax.lax.cummin(x)
+
+
+def skyline_reduce(energy, latency, feasible, xp=np):
+    """(keep, n_feasible, ref_energy, ref_latency) of one evaluated tile.
+
+    ``keep`` marks the feasible Pareto survivors of the (energy, latency)
+    minimization — the same set ``dse.pareto_mask`` selects, computed with
+    static shapes so it jits: infeasible rows are mapped to +inf sort keys
+    instead of being compacted away.  ``ref_*`` are the feasible maxima
+    (-inf when the tile has no feasible point) that pin the streaming
+    frontier's hypervolume reference point.
+    """
+    e = xp.asarray(energy)
+    l = xp.asarray(latency)
+    feas = xp.asarray(feasible, bool)
+    e_key = xp.where(feas, e, xp.inf)
+    l_key = xp.where(feas, l, xp.inf)
+    order = xp.lexsort((e_key, l_key))
+    es, ls = e_key[order], l_key[order]
+    first = xp.searchsorted(ls, ls, side="left")
+    prefix = _cummin(es, xp)
+    best_before = xp.where(first > 0, prefix[xp.maximum(first - 1, 0)], xp.inf)
+    # survive: strictly faster points all cost more energy, and tied-latency
+    # points only if they hold the group's energy minimum (equal duplicates
+    # never dominate each other — both stay, matching dse.pareto_mask)
+    nondom = (es < best_before) & (es <= es[first]) & feas[order]
+    if xp is np:
+        keep = np.zeros(e.shape, bool)
+        keep[order] = nondom
+    else:
+        keep = xp.zeros(e.shape, bool).at[order].set(nondom)
+    n_feasible = xp.sum(feas)
+    ref_e = xp.max(xp.where(feas, e, -xp.inf))
+    ref_l = xp.max(xp.where(feas, l, -xp.inf))
+    return keep, n_feasible, ref_e, ref_l
+
+
+def sweep_feasibility(power_w, latency_s, n_chips, hbm_bytes, base_chips,
+                      state_gb_per_device, valid, max_power_w, max_latency_s,
+                      min_hbm_fit: bool, xp=np):
+    """``dse.feasibility_mask`` arithmetic in xp-generic, padding-aware form.
+
+    ``valid`` masks tile padding lanes (always infeasible); ``max_power_w`` /
+    ``max_latency_s`` of ``None`` skip their comparison exactly like the
+    numpy constraint path, so the float64 variants agree bitwise."""
+    ok = xp.asarray(valid) > 0
+    nc = xp.asarray(n_chips) * 1.0
+    if min_hbm_fit:
+        state_pd = state_gb_per_device * (xp.asarray(base_chips) * 1.0) / nc
+        ok = ok & (state_pd * 1e9 <= hbm_bytes * 0.9)
+    if max_power_w is not None:
+        ok = ok & (power_w * nc <= max_power_w)
+    if max_latency_s is not None:
+        ok = ok & (latency_s <= max_latency_s)
+    return ok
+
+
+# convex-weight probe spread of the on-device dominance screen: each weight
+# w picks the feasible argmin of w*(e/e_min) + (l/l_min) — a point ON the
+# tile skyline — and everything strictly dominated by a probe is screened
+# out.  Geometric spread covers frontier slopes across four decades.
+_PROBE_WEIGHTS = np.geomspace(1e-2, 1e2, 8)
+
+
+def _screen_rows(energy, latency, feasible):
+    """jnp screen shared by the jit reference path and the Pallas wrapper:
+    per-workload-row conservative dominance screen of [W, N] sweeps.
+    Returns (keep, n_surv, n_feas, ref_e, ref_l) with ``keep`` the [W, N]
+    survivor mask.
+
+    The screen is CONSERVATIVE: probes are real feasible points (argmins of
+    convex (energy, latency) weightings, i.e. skyline members), and a
+    skyline point is dominated by nothing — so the surviving set is always
+    a superset of the exact ``skyline_reduce`` set, and the frontier fold
+    (``StreamingFrontier.merge_reduced`` -> ``dse.pareto_mask``) recovers
+    the exact skyline from it.  Everything here is elementwise / reduction
+    work — no sort, no prefix scan: XLA's comparator sort costs more than
+    the whole simulation on [W, 32k] tiles, while the probe screen leaves
+    only a few percent of slack over the exact skyline on real campaign
+    tiles.  All dominance comparisons run in the sweep dtype against probe
+    values gathered from the same arrays, so screening decisions are exact
+    in any precision."""
+    import jax
+    import jax.numpy as jnp
+    wts = jnp.asarray(_PROBE_WEIGHTS, energy.dtype)
+
+    def row(e, l, feas):
+        e_lo = jnp.min(jnp.where(feas, e, jnp.inf))
+        l_lo = jnp.min(jnp.where(feas, l, jnp.inf))
+        score = wts[:, None] * (e / e_lo)[None, :] + (l / l_lo)[None, :]
+        pi = jnp.argmin(jnp.where(feas[None, :], score, jnp.inf), axis=1)
+        ep, lp = e[pi][:, None], l[pi][:, None]             # [P, 1] probes
+        dom = ((e[None, :] >= ep) & (l[None, :] >= lp)
+               & ((e[None, :] > ep) | (l[None, :] > lp)))
+        keep = feas & ~jnp.any(dom, axis=0)
+        return (keep, jnp.sum(keep), jnp.sum(feas),
+                jnp.max(jnp.where(feas, e, -jnp.inf)),
+                jnp.max(jnp.where(feas, l, -jnp.inf)))
+
+    return jax.vmap(row)(energy, latency, feasible)
+
+
+def _compact_rows_host(keep, energy, latency, max_survivors: int):
+    """numpy survivor compaction of screened [W, N] rows: (surv_idx, surv_e,
+    surv_l) as [W, K] with ascending lanes, rows past the row's survivor
+    count zero-filled.  The host side of the reduction on backends where
+    device arrays are host memory anyway (CPU interpret); compiled
+    accelerator paths compact on device (``_compact_rows_device``) so only
+    O(K) crosses the link."""
+    w_count, n = keep.shape
+    k = min(int(max_survivors), n)
+    surv_idx = np.zeros((w_count, k), np.int64)
+    surv_e = np.zeros((w_count, k), energy.dtype)
+    surv_l = np.zeros((w_count, k), latency.dtype)
+    for w in range(w_count):
+        pos = np.flatnonzero(keep[w])[:k]
+        surv_idx[w, :pos.size] = pos
+        surv_e[w, :pos.size] = energy[w, pos]
+        surv_l[w, :pos.size] = latency[w, pos]
+    return surv_idx, surv_e, surv_l
+
+
+def _compact_rows_device(keep, energy, latency, max_survivors: int):
+    """jnp survivor compaction (cumsum-rank scatter) for compiled backends,
+    same contract as ``_compact_rows_host``."""
+    import jax
+    import jax.numpy as jnp
+    n = keep.shape[1]
+    k = min(int(max_survivors), n)
+    lane = jnp.arange(n, dtype=jnp.int32)
+
+    def row(kp, e, l):
+        tgt = jnp.where(kp, jnp.cumsum(kp) - 1, k)
+        pos = jnp.zeros(k, jnp.int32).at[tgt].set(lane, mode="drop")
+        filled = jnp.arange(k) < jnp.sum(kp)
+        return (jnp.where(filled, pos, 0),
+                jnp.where(filled, e[pos], 0.0),
+                jnp.where(filled, l[pos], 0.0))
+
+    return jax.vmap(row)(keep, energy, latency)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: ndarray fields
+class SweepReduced:
+    """Reduced result of one fused (all-workloads x tile) sweep launch.
+
+    ``surv_*`` are the screened tile survivors (a feasible superset of the
+    tile's Pareto skyline) — all a frontier merge needs; ``*_full`` back
+    the (rare) overflow fallback when a workload's screened set exceeds
+    ``max_survivors``."""
+
+    surv_idx: np.ndarray         # int [W, K] lane indices into the tile
+    surv_energy: np.ndarray      # [W, K], rows past n_survivors are fill
+    surv_latency: np.ndarray     # [W, K]
+    n_survivors: np.ndarray      # int [W] (may exceed K: overflow)
+    n_feasible: np.ndarray       # int [W]
+    ref_energy: np.ndarray       # [W] feasible max (-inf if none)
+    ref_latency: np.ndarray      # [W]
+    max_survivors: int
+    energy_full: object          # [W, N] — read only on overflow fallback
+    latency_full: object
+    feasible_full: object
+
+    def overflowed(self, w: int) -> bool:
+        return int(self.n_survivors[w]) > self.max_survivors
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_sweep_reduced(sim: SimConfig, max_power_w, max_latency_s,
+                       min_hbm_fit: bool):
+    import jax
+    import jax.numpy as jnp
+
+    def run(wl_cols, chip_cols, n_chips, freq_mhz, mesh_pod, mesh_data,
+            mesh_model, valid):
+        # workloads broadcast as a leading DATA axis ([W, 1] x [1, N] ->
+        # [W, N]) rather than a Python loop, so the traced graph — and the
+        # compile time — is independent of the workload count
+        row = lambda a: jnp.asarray(a)[None, :]
+        wl = {k: wl_cols[:, i:i + 1] for i, k in enumerate(WL_COLS)}
+        cols = {k: row(v) for k, v in chip_cols.items()}
+        ana = scale_census(wl, wl["base_chips"], row(n_chips), xp=jnp)
+        b = simulate_batch(ana, None, row(n_chips), row(freq_mhz), sim=sim,
+                           xp=jnp, gathered=cols,
+                           mesh_pod=row(mesh_pod), mesh_data=row(mesh_data),
+                           mesh_model=row(mesh_model))
+        feas = sweep_feasibility(
+            b.power_w, b.latency_s, row(n_chips), cols["hbm_bytes"],
+            wl["base_chips"], wl["state_gb_per_device"], row(valid),
+            max_power_w, max_latency_s, min_hbm_fit, xp=jnp)
+        e = jnp.broadcast_to(b.energy_j, feas.shape)
+        l = jnp.broadcast_to(b.latency_s, feas.shape)
+        return _screen_rows(e, l, feas) + (e, l, feas)
+
+    return jax.jit(run)
+
+
+def sweep_workloads_reduced_jit(wl_cols, chip_cols: Dict, n_chips, freq_mhz,
+                                mesh_pod, mesh_data, mesh_model, valid,
+                                sim: SimConfig = SimConfig(),
+                                max_power_w=None, max_latency_s=None,
+                                min_hbm_fit: bool = True,
+                                max_survivors: int = 2048) -> SweepReduced:
+    """The jit reference path of the fused on-device campaign evaluator.
+
+    One launch evaluates ALL ``W`` workloads on one (padded) candidate tile —
+    census scaling, topology-aware simulation, constraint masking and the
+    per-tile skyline pre-reduction (a conservative dominance screen whose
+    survivors are a guaranteed superset of the tile's feasible Pareto set)
+    all happen in-trace — so the host only handles O(survivors) per tile.
+    float32 under the repo's default x64-disabled config (the ``"jit"``
+    precision tier); the Pallas kernel path (``repro.kernels.dse_sweep``)
+    shares every helper and runs float64 in interpret mode.  ``chip_cols``
+    needs the ``SWEEP_GATHER_FIELDS`` columns; ``wl_cols`` is the packed
+    [W, 6] ``WL_COLS`` matrix.
+    """
+    w_count, n_wl_cols = np.shape(wl_cols)
+    if n_wl_cols != len(WL_COLS):
+        raise ValueError(f"wl_cols must be [W, {len(WL_COLS)}] ({WL_COLS})")
+    cols = {k: chip_cols[k] for k in SWEEP_GATHER_FIELDS}
+    out = _jit_sweep_reduced(
+        sim, max_power_w, max_latency_s, bool(min_hbm_fit))(
+            np.asarray(wl_cols, np.float64), cols, n_chips, freq_mhz,
+            mesh_pod, mesh_data, mesh_model, valid)
+    return build_sweep_reduced(out, int(max_survivors))
+
+
+def build_sweep_reduced(out, max_survivors: int) -> SweepReduced:
+    """Assemble the host-side ``SweepReduced`` from a fused launch's output
+    tuple (keep, n_surv, n_feas, ref_e, ref_l, e_full, l_full, feas_full).
+
+    Compaction runs in numpy: on CPU (this container, and interpret-mode
+    CI) device arrays ARE host memory, so the mask + gathers here cost a
+    memcpy — far less than an XLA prefix-scan compaction.  A compiled
+    accelerator deployment would swap in ``_compact_rows_device`` before
+    the transfer; the contract is identical.
+    """
+    keep = np.asarray(out[0])
+    e_full, l_full = np.asarray(out[5]), np.asarray(out[6])
+    surv_idx, surv_e, surv_l = _compact_rows_host(
+        keep, e_full, l_full, max_survivors)
+    return SweepReduced(
+        surv_idx=surv_idx, surv_energy=surv_e, surv_latency=surv_l,
+        n_survivors=np.asarray(out[1]), n_feasible=np.asarray(out[2]),
+        ref_energy=np.asarray(out[3]), ref_latency=np.asarray(out[4]),
+        max_survivors=int(max_survivors),
+        energy_full=e_full, latency_full=l_full,
+        feasible_full=np.asarray(out[7]))
+
+
 @functools.lru_cache(maxsize=None)
 def _jit_simulate_batch(sim: SimConfig, with_mesh: bool):
     import jax

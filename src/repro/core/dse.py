@@ -57,10 +57,13 @@ class CandidateBatch:
     ``candidates`` keeps the scalar view (report/API compatibility); the
     arrays are what the vectorized paths consume.  ``mesh_data``/``mesh_model``
     are the trailing two mesh extents (1 for unmeshed edge parts), matching
-    ``features.extract``'s reading of ``mesh_shape``.
+    ``features.extract``'s reading of ``mesh_shape``.  Array-only batches
+    (``candidates=None``, e.g. ``SpaceSpec.slice(with_candidates=False)``)
+    serve the zero-copy campaign paths that materialize ``Candidate``
+    objects lazily for frontier survivors only.
     """
 
-    candidates: Tuple[Candidate, ...]
+    candidates: Optional[Tuple[Candidate, ...]]
     chip_idx: np.ndarray                     # int32 [N] -> CHIP_TABLE row
     n_chips: np.ndarray                      # int64 [N]
     mesh_data: np.ndarray                    # int64 [N], mesh[-2] or 1
@@ -86,9 +89,12 @@ class CandidateBatch:
             chip_cols=table.gather(chip_idx))
 
     def __len__(self) -> int:
-        return len(self.candidates)
+        return int(np.shape(self.chip_idx)[0])
 
     def __getitem__(self, i: int) -> Candidate:
+        if self.candidates is None:
+            raise TypeError("array-only CandidateBatch (candidates=None); "
+                            "materialize candidates from the owning SpaceSpec")
         return self.candidates[i]
 
     def pod_axis(self) -> np.ndarray:
@@ -164,28 +170,17 @@ def _scale_analysis(base_analysis: Dict, base_chips: int, cand: Candidate) -> Di
 
 
 def _scale_analysis_batch(base_analysis: Dict, base_chips,
-                          n_chips: np.ndarray) -> Dict[str, np.ndarray]:
+                          n_chips: np.ndarray, xp=np) -> Dict[str, np.ndarray]:
     """``_scale_analysis`` over a whole candidate array at once.
 
     ``base_analysis`` values and ``base_chips`` may themselves be arrays
     (broadcast against ``n_chips``) — that is how multi-workload sweeps tile
-    W workloads x N candidates into one flat batch.  Emits the same
-    ``coll_payload_bytes`` as the scalar version, with identical IEEE
-    expressions so the scalar oracle matches bitwise.
+    W workloads x N candidates into one flat batch.  Thin alias of
+    ``costmodel.scale_census`` (the single home of the scaling arithmetic,
+    shared with the fused sweep paths), so the scalar oracle matches the
+    default numpy float64 variant bitwise.
     """
-    base_chips = np.asarray(base_chips, np.float64)
-    nc = np.asarray(n_chips, np.float64)
-    r = base_chips / nc
-    ring_base = np.maximum((base_chips - 1) / base_chips, 1e-9)
-    ring = np.where(nc > 1, ((nc - 1) / nc) / ring_base, 0.0)
-    return {
-        "flops": np.asarray(base_analysis["flops"]) * r,
-        "hbm_bytes": np.asarray(base_analysis["hbm_bytes"]) * r,
-        "collective_bytes": np.asarray(base_analysis["collective_bytes"]) * r * ring,
-        "wire_bytes": np.asarray(base_analysis["wire_bytes"]) * r * ring,
-        "coll_payload_bytes":
-            np.asarray(base_analysis["wire_bytes"]) * r / ring_base,
-    }
+    return costmodel.scale_census(base_analysis, base_chips, n_chips, xp=xp)
 
 
 def feasibility_mask(batch: CandidateBatch, sim: costmodel.SimBatch,

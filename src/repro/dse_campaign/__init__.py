@@ -13,7 +13,8 @@ from repro.dse_campaign.frontier import (FrontierSnapshot, StreamingFrontier,
                                          candidate_from_dict,
                                          candidate_to_dict,
                                          canonical_frontier,
-                                         frontiers_identical)
+                                         frontiers_identical,
+                                         hypervolume_2d)
 from repro.dse_campaign.runner import Campaign, CampaignResult, TileStat
 from repro.dse_campaign.space import (DEFAULT_VARIANTS, SliceVariant,
                                       SpaceSpec, default_campaign_space,
@@ -24,6 +25,6 @@ __all__ = [
     "Campaign", "CampaignResult", "DEFAULT_VARIANTS", "FrontierSnapshot",
     "SliceVariant", "SpaceSpec", "StreamingFrontier", "TileStat",
     "candidate_from_dict", "candidate_to_dict", "canonical_frontier",
-    "default_campaign_space", "frontiers_identical", "store",
-    "tiny_campaign_space",
+    "default_campaign_space", "frontiers_identical", "hypervolume_2d",
+    "store", "tiny_campaign_space",
 ]

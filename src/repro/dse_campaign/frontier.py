@@ -28,6 +28,38 @@ import numpy as np
 from repro.core import dse
 
 
+def hypervolume_2d(energy_j, latency_s, ref_energy_j, ref_latency_s) -> float:
+    """Area dominated by an (energy, latency) point set up to a reference
+    point — the 2D-minimization rectangle sweep.  The single definition the
+    streaming frontier's trajectory proxy AND the benchmark's cross-evaluator
+    comparison both compute with, so the two hypervolume gates cannot drift.
+    Points outside the ref box contribute zero."""
+    e = np.asarray(energy_j, np.float64)
+    l = np.asarray(latency_s, np.float64)
+    if ref_energy_j is None or not e.size:
+        return 0.0
+    inside = (e < ref_energy_j) & (l < ref_latency_s)
+    if not inside.any():
+        return 0.0
+    e, l = e[inside], l[inside]
+    order = np.lexsort((e, l))             # latency asc (energy desc)
+    e, l = e[order], l[order]
+    right = np.append(l[1:], ref_latency_s)
+    return float(np.sum((ref_energy_j - e) * (right - l)))
+
+
+def _merge_intervals(intervals: List[Tuple[int, int]]) -> List[Tuple[int, int]]:
+    """Coalesce [start, end) intervals — the one implementation of the
+    ``_seen`` invariant both merge entry points claim indices through."""
+    merged: List[Tuple[int, int]] = []
+    for s, e in sorted(intervals):
+        if merged and s <= merged[-1][1]:
+            merged[-1] = (merged[-1][0], max(merged[-1][1], e))
+        else:
+            merged.append((s, e))
+    return merged
+
+
 @dataclasses.dataclass(frozen=True)
 class FrontierSnapshot:
     """Trajectory point recorded after one merge."""
@@ -89,15 +121,42 @@ class StreamingFrontier:
             brk = np.flatnonzero(np.diff(new_idx) > 1)
             new_starts = new_idx[np.concatenate([[0], brk + 1])]
             new_ends = new_idx[np.concatenate([brk, [new_idx.size - 1]])] + 1
-            merged: List[Tuple[int, int]] = []
-            for s, e in sorted(self._seen + list(zip(new_starts.tolist(),
-                                                     new_ends.tolist()))):
-                if merged and s <= merged[-1][1]:
-                    merged[-1] = (merged[-1][0], max(merged[-1][1], e))
-                else:
-                    merged.append((s, e))
-            self._seen = merged
+            self._seen = _merge_intervals(
+                self._seen + list(zip(new_starts.tolist(),
+                                      new_ends.tolist())))
         return novel
+
+    def _fold(self, new_cands: List[dse.Candidate], new_e: np.ndarray,
+              new_l: np.ndarray, new_i: np.ndarray) -> None:
+        """Fold already-feasible, already-novel points into the skyline —
+        the union / dedup-by-index / pareto core shared by ``merge`` and
+        ``merge_reduced`` so the two entry points cannot diverge."""
+        # union: current frontier first so dedup-by-index keeps it
+        all_cands = self.candidates + new_cands
+        all_e = np.concatenate([self.energy_j, new_e])
+        all_l = np.concatenate([self.latency_s, new_l])
+        all_i = np.concatenate([self.indices, new_i])
+        _, first = np.unique(all_i, return_index=True)
+        first.sort()
+        all_e, all_l, all_i = all_e[first], all_l[first], all_i[first]
+        all_cands = [all_cands[i] for i in first]
+        mask = dse.pareto_mask(all_e, all_l, np.ones(len(all_i), bool))
+        sel = np.flatnonzero(mask)
+        # canonical order: latency, then energy, then global index —
+        # identical regardless of the merge order that produced the set
+        order = sel[np.lexsort((all_i[sel], all_e[sel], all_l[sel]))]
+        self.candidates = [all_cands[i] for i in order]
+        self.energy_j = all_e[order]
+        self.latency_s = all_l[order]
+        self.indices = all_i[order]
+
+    def _snapshot(self, tile: int) -> None:
+        self.trajectory.append(FrontierSnapshot(
+            tile=tile, evaluated=self.evaluated, feasible=self.feasible_seen,
+            frontier_size=len(self),
+            best_energy_j=float(self.energy_j.min()) if len(self) else float("inf"),
+            best_latency_s=float(self.latency_s.min()) if len(self) else float("inf"),
+            hypervolume=self.hypervolume()))
 
     def merge(self, candidates: Sequence[dse.Candidate], energy_j, latency_s,
               feasible=None, indices=None, tile: int = -1) -> int:
@@ -129,51 +188,89 @@ class StreamingFrontier:
             self.ref_latency_s = float(latency_s[keep].max())
 
         if keep.size:
-            # union: current frontier first so dedup-by-index keeps it
-            all_cands = self.candidates + [candidates[i] for i in keep]
-            all_e = np.concatenate([self.energy_j, energy_j[keep]])
-            all_l = np.concatenate([self.latency_s, latency_s[keep]])
-            all_i = np.concatenate([self.indices, indices[keep]])
-            _, first = np.unique(all_i, return_index=True)
-            first.sort()
-            all_e, all_l, all_i = all_e[first], all_l[first], all_i[first]
-            all_cands = [all_cands[i] for i in first]
-            mask = dse.pareto_mask(all_e, all_l, np.ones(len(all_i), bool))
-            sel = np.flatnonzero(mask)
-            # canonical order: latency, then energy, then global index —
-            # identical regardless of the merge order that produced the set
-            order = sel[np.lexsort((all_i[sel], all_e[sel], all_l[sel]))]
-            self.candidates = [all_cands[i] for i in order]
-            self.energy_j = all_e[order]
-            self.latency_s = all_l[order]
-            self.indices = all_i[order]
+            self._fold([candidates[i] for i in keep], energy_j[keep],
+                       latency_s[keep], indices[keep])
+        self._snapshot(tile)
+        return len(self)
 
-        self.trajectory.append(FrontierSnapshot(
-            tile=tile, evaluated=self.evaluated, feasible=self.feasible_seen,
-            frontier_size=len(self),
-            best_energy_j=float(self.energy_j.min()) if len(self) else float("inf"),
-            best_latency_s=float(self.latency_s.min()) if len(self) else float("inf"),
-            hypervolume=self.hypervolume()))
+    def _span_overlap(self, lo: int, hi: int) -> int:
+        """How many indices of [lo, hi) an earlier merge already claimed."""
+        return sum(max(0, min(hi, e) - max(lo, s)) for s, e in self._seen)
+
+    def _claim_span(self, lo: int, hi: int) -> None:
+        self._seen = _merge_intervals(self._seen + [(lo, hi)])
+
+    def merge_reduced(self, candidates: Sequence[dse.Candidate], energy_j,
+                      latency_s, indices, *, span: Tuple[int, int],
+                      n_feasible: int, ref_energy_j: Optional[float] = None,
+                      ref_latency_s: Optional[float] = None,
+                      tile: int = -1) -> int:
+        """Fold a pre-reduced tile — any FEASIBLE SUPERSET of its Pareto
+        survivors plus the tile aggregates — into the skyline; identical
+        outcome to ``merge`` on the raw tile arrays.
+
+        The fused on-device evaluators (``costmodel.sweep_workloads_reduced_jit``
+        and the Pallas DSE-sweep kernel) discard dominated points on device,
+        so the host only sees the survivors (the exact skyline, or a
+        conservative screen superset of it — extra dominated points are
+        eliminated by the fold's own ``pareto_mask``).  Identity with the
+        raw merge holds because (a) dominance is transitive — a tile point
+        dominated inside its own tile can never enter the union skyline,
+        whether or not it rides along in ``candidates`` — and (b) the
+        aggregates reproduce the raw path's accounting exactly: ``span`` is
+        the tile's global index interval [lo, hi) (claimed whole for
+        idempotence), ``n_feasible`` the tile's feasible count, and
+        ``ref_*`` the tile's feasible maxima that pin the hypervolume
+        reference point on the first feasible merge.  Re-merging a fully
+        seen span is a no-op (snapshot only, like ``merge``); partially
+        seen spans are refused — tiles are the dedup unit of the reduced
+        path.
+        """
+        lo, hi = int(span[0]), int(span[1])
+        if hi <= lo:
+            raise ValueError(f"empty span [{lo}, {hi})")
+        energy_j = np.asarray(energy_j, np.float64)
+        latency_s = np.asarray(latency_s, np.float64)
+        indices = np.asarray(indices, np.int64)
+        n = len(candidates)
+        if energy_j.shape != (n,) or latency_s.shape != (n,) or \
+                indices.shape != (n,):
+            raise ValueError(f"shape mismatch: {n} survivors vs "
+                             f"{energy_j.shape}/{latency_s.shape}/"
+                             f"{indices.shape}")
+        if n > hi - lo or int(n_feasible) > hi - lo:
+            raise ValueError(f"{n} survivors / {n_feasible} feasible exceed "
+                             f"span [{lo}, {hi})")
+        if indices.size and (indices.min() < lo or indices.max() >= hi):
+            raise ValueError(f"survivor indices outside span [{lo}, {hi})")
+        overlap = self._span_overlap(lo, hi)
+        if overlap == hi - lo:
+            self._snapshot(tile)                 # re-merged tile: no-op
+            return len(self)
+        if overlap:
+            raise ValueError(
+                f"span [{lo}, {hi}) partially overlaps already-merged "
+                "indices; reduced merges dedup whole tiles — re-merge the "
+                "exact tile or use merge() with per-point indices")
+        self._claim_span(lo, hi)
+        self.evaluated += hi - lo
+        self.feasible_seen += int(n_feasible)
+        if self.ref_energy_j is None and int(n_feasible) > 0:
+            self.ref_energy_j = float(ref_energy_j)
+            self.ref_latency_s = float(ref_latency_s)
+        if n:
+            self._fold(list(candidates), energy_j, latency_s, indices)
+        self._snapshot(tile)
         return len(self)
 
     def hypervolume(self) -> float:
-        """Area dominated by the frontier up to the fixed reference point.
-
-        Exact for the 2D minimization given the ref point; a *proxy* overall
-        because the ref point is pinned from early data rather than the true
-        nadir.  Points outside the ref box contribute zero.
+        """Area dominated by the frontier up to the fixed reference point
+        (``hypervolume_2d``).  Exact for the 2D minimization given the ref
+        point; a *proxy* overall because the ref point is pinned from early
+        data rather than the true nadir.
         """
-        if not len(self) or self.ref_energy_j is None:
-            return 0.0
-        e, l = self.energy_j, self.latency_s
-        inside = (e < self.ref_energy_j) & (l < self.ref_latency_s)
-        if not inside.any():
-            return 0.0
-        e, l = e[inside], l[inside]
-        order = np.lexsort((e, l))             # latency asc (energy desc)
-        e, l = e[order], l[order]
-        right = np.append(l[1:], self.ref_latency_s)
-        return float(np.sum((self.ref_energy_j - e) * (right - l)))
+        return hypervolume_2d(self.energy_j, self.latency_s,
+                              self.ref_energy_j, self.ref_latency_s)
 
     def as_pareto_frontier(self, workload: dse.Workload) -> dse.ParetoFrontier:
         """The running skyline in ``dse.ParetoFrontier`` form (sorted by

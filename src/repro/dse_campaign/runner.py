@@ -1,24 +1,42 @@
 """Campaign orchestrator: resumable, bounded-memory DSE over mega-spaces.
 
 A ``Campaign`` sweeps every workload in a cached dry-run artifact set across
-a ``SpaceSpec``, tile by tile: each ``chunk_size`` tile is materialized,
-evaluated for all workloads (``dse.evaluate_workload_tile`` — the numpy
-simulator, its jitted variant, or the trained fast-path predictors), masked
-by the ``Constraint``, folded into each workload's ``StreamingFrontier``,
-and released.  Peak candidate memory is one tile regardless of space size.
-Tiles carry their mesh axes (pod/data/model) into the simulators, so the
-factorization axis of the space differentiates the frontier on every
-evaluator, not just the predictor fast path.
+a ``SpaceSpec``, tile by tile.  Two tile engines exist:
+
+* the per-workload loop (``"numpy"`` float64 — bitwise-identical to one-shot
+  ``pareto_search`` — and ``"fast"`` predictors): each tile is materialized,
+  evaluated per workload, constraint-masked and raw-merged into that
+  workload's ``StreamingFrontier``.
+
+* the fused zero-copy pipeline (``"jit"`` and ``"pallas"``): tiles stream as
+  array-only batches (no per-candidate Python objects), padded to
+  ``chunk_size`` with a validity mask so the device function compiles ONCE
+  for the whole sweep, and ALL workloads are evaluated in a single launch
+  per tile (``costmodel.sweep_workloads_reduced_jit`` or the Pallas
+  DSE-sweep kernel).  The launch also reduces each workload's tile to its
+  feasible Pareto survivors on device, so the host transfers O(survivors)
+  instead of O(tile) and merges via ``StreamingFrontier.merge_reduced``
+  (proven identical to the raw merge); ``Candidate`` objects are
+  materialized lazily for survivors only.  A prefetch thread stages the
+  next tile's arrays while the device evaluates the current one
+  (double-buffering), so candidate generation overlaps execution.
+
+Peak candidate memory is one tile regardless of space size.  Tiles carry
+their mesh axes (pod/data/model) into the simulators, so the factorization
+axis of the space differentiates the frontier on every evaluator.
 
 Checkpointing is by tile index: the campaign state (spec, workloads,
 frontiers, trajectory, next tile) round-trips through JSON, so an
 interrupted sweep resumes exactly where it stopped and converges to the
-same frontier a fresh run produces.
+same frontier a fresh run produces — on the fused engines too, because the
+reduced merge reproduces the raw merge's accounting exactly.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -31,6 +49,8 @@ from repro.dse_campaign.frontier import StreamingFrontier
 from repro.dse_campaign.space import SpaceSpec
 
 WorkloadKey = Tuple[str, str]
+
+EVALUATORS = ("numpy", "jit", "fast", "pallas")
 
 
 @dataclasses.dataclass
@@ -79,13 +99,72 @@ class CampaignResult:
         return self.candidates_evaluated / max(self.sweep_wall_s, 1e-9)
 
 
+class _TilePrefetcher:
+    """Double-buffered tile staging: a worker thread materializes the next
+    tile(s) of a ``SpaceSpec.tiles`` generator while the main thread drives
+    the device on the current one.  The worker does numpy-only work (no JAX
+    dispatch), so it is safe alongside the evaluating thread; ``close()``
+    unblocks and retires it when iteration stops early (max_tiles)."""
+
+    _END = object()
+
+    def __init__(self, it, depth: int = 1):
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, int(depth)))
+        self._stop = threading.Event()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._work, args=(it,),
+                                        daemon=True)
+        self._thread.start()
+
+    def _put(self, item) -> bool:
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _work(self, it):
+        try:
+            for item in it:
+                if not self._put(item):
+                    return
+        except BaseException as exc:  # re-raised on the consuming thread
+            self._err = exc
+        self._put(self._END)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._END:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+
+
 class Campaign:
     """Streaming multi-workload DSE campaign over a ``SpaceSpec``.
 
     ``evaluator`` selects the tile engine: ``"numpy"`` (float64 simulator,
     bitwise-identical to one-shot ``pareto_search``), ``"jit"``
-    (``simulate_batch_jit``), or ``"fast"`` (trained predictors; pass
-    fitted ``power_model``/``cycles_model``).
+    (float32 fused multi-workload sweep, ``costmodel.sweep_workloads_
+    reduced_jit``), ``"pallas"`` (the fused Pallas DSE-sweep kernel —
+    float64 in interpret mode on CPU, where its frontier holds the numpy
+    evaluator's exact candidate set, float32 compiled on an accelerator),
+    or ``"fast"``
+    (trained predictors; pass fitted ``power_model``/``cycles_model``).
+
+    ``pipeline=False`` disables the fused path for ``"jit"`` and falls back
+    to the original per-workload loop on unpadded tiles (one launch per
+    workload per tile, full-tile host transfer, raw merges) — kept as the
+    measured baseline for the evaluator-speedup benchmark.
     """
 
     def __init__(self, workloads: Sequence[dse.Workload], space: SpaceSpec,
@@ -93,9 +172,12 @@ class Campaign:
                  evaluator: str = "numpy",
                  sim: costmodel.SimConfig = costmodel.SimConfig(),
                  power_model=None, cycles_model=None,
-                 checkpoint_every: int = 1):
-        if evaluator not in ("numpy", "jit", "fast"):
-            raise ValueError(f"unknown evaluator {evaluator!r}")
+                 checkpoint_every: int = 1,
+                 pipeline: bool = True,
+                 max_survivors: int = 2048):
+        if evaluator not in EVALUATORS:
+            raise ValueError(f"unknown evaluator {evaluator!r}; expected one "
+                             f"of {EVALUATORS}")
         if evaluator == "fast" and (power_model is None or cycles_model is None):
             raise ValueError("evaluator='fast' needs fitted power_model and "
                              "cycles_model")
@@ -110,6 +192,8 @@ class Campaign:
         self.power_model = power_model
         self.cycles_model = cycles_model
         self.checkpoint_every = max(int(checkpoint_every), 1)
+        self.pipeline = bool(pipeline)
+        self.max_survivors = max(int(max_survivors), 1)
         self.frontiers: Dict[WorkloadKey, StreamingFrontier] = {
             k: StreamingFrontier() for k in keys}
         self.tile_stats: List[TileStat] = []
@@ -148,15 +232,16 @@ class Campaign:
         """Rebuild an interrupted campaign from its checkpoint file; the
         next ``run`` continues at the first unevaluated tile.
 
-        Space, workloads, constraint, ``SimConfig`` and evaluator are all
-        restored from the checkpoint.  Fitted predictor models cannot be
-        serialized, so resuming an ``evaluator="fast"`` campaign requires
-        re-passing the SAME ``power_model``/``cycles_model`` via kwargs
-        (``__init__`` refuses to resume without them); supplying retrained
-        models would splice two predictors into one frontier undetected.
-        A checkpoint written under a different ``costmodel.SIM_MODEL_VERSION``
-        is refused for the same reason: its folded-in tiles and the tiles a
-        resume would evaluate come from incomparable cost models.
+        Space, workloads, constraint, ``SimConfig``, evaluator and pipeline
+        mode are all restored from the checkpoint.  Fitted predictor models
+        cannot be serialized, so resuming an ``evaluator="fast"`` campaign
+        requires re-passing the SAME ``power_model``/``cycles_model`` via
+        kwargs (``__init__`` refuses to resume without them); supplying
+        retrained models would splice two predictors into one frontier
+        undetected.  A checkpoint written under a different
+        ``costmodel.SIM_MODEL_VERSION`` is refused for the same reason: its
+        folded-in tiles and the tiles a resume would evaluate come from
+        incomparable cost models.
         """
         state = store.load_checkpoint(path)
         ckpt_model = state.get("sim_model_version")
@@ -174,6 +259,11 @@ class Campaign:
                      for w in state["workloads"]]
         cons = dse.Constraint(**state["constraint"])
         kwargs.setdefault("sim", costmodel.SimConfig(**state["sim"]))
+        # checkpoints written before the fused pipeline carry no key: they
+        # ran the legacy per-workload engine, so resume must stay on it —
+        # splicing the fused float32 sweep into a half-done legacy "jit"
+        # campaign could flip float32 near-ties mid-frontier
+        kwargs.setdefault("pipeline", state.get("pipeline", False))
         camp = cls(workloads, SpaceSpec.from_dict(state["space"]),
                    constraint=cons, evaluator=state["evaluator"], **kwargs)
         camp.next_tile = state["next_tile"]
@@ -183,7 +273,7 @@ class Campaign:
             camp.frontiers[(arch, shape)] = StreamingFrontier.from_state(fr_state)
         return camp
 
-    # -- evaluation ---------------------------------------------------------
+    # -- per-workload evaluation (numpy / fast / legacy jit) ----------------
 
     def _evaluate_tile(self, wl: dse.Workload, batch: dse.CandidateBatch
                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -205,6 +295,107 @@ class Campaign:
             self.constraint)
         return energy, latency, feasible
 
+    # -- fused zero-copy pipeline (jit / pallas) ----------------------------
+
+    @property
+    def fused(self) -> bool:
+        """Whether tiles go through the fused multi-workload reduced path."""
+        return (self.evaluator == "pallas"
+                or (self.evaluator == "jit" and self.pipeline))
+
+    @property
+    def _wl_cols(self) -> np.ndarray:
+        """Packed [W, len(WL_COLS)] per-workload scalar matrix (cached)."""
+        cols = getattr(self, "_wl_cols_cache", None)
+        if cols is None:
+            cols = np.asarray(
+                [[wl.base_analysis["flops"], wl.base_analysis["hbm_bytes"],
+                  wl.base_analysis["collective_bytes"],
+                  wl.base_analysis["wire_bytes"], wl.base_chips,
+                  wl.state_gb_per_device] for wl in self.workloads],
+                np.float64)
+            self._wl_cols_cache = cols
+        return cols
+
+    def _padded_tile_arrays(self, batch: dse.CandidateBatch) -> Dict:
+        """The tile's packed columns padded to ``chunk_size`` with a validity
+        mask — every tile presents the SAME shapes to the device function,
+        so jit/Pallas trace exactly once for the whole sweep (the partial
+        final tile no longer retriggers a retrace)."""
+        n = len(batch)
+        target = max(self.space.chunk_size, n)
+        pad = target - n
+
+        def padarr(a):
+            a = np.asarray(a)
+            return a if pad == 0 else np.concatenate(
+                [a, np.repeat(a[:1], pad, axis=0)])
+
+        valid = np.ones(target, np.float64)
+        valid[n:] = 0.0
+        arrays = {
+            "n_chips": padarr(batch.n_chips),
+            "freq_mhz": padarr(batch.freq_mhz),
+            "mesh_pod": padarr(batch.pod_axis()),
+            "mesh_data": padarr(batch.mesh_data),
+            "mesh_model": padarr(batch.mesh_model),
+            "valid": valid,
+        }
+        arrays.update({k: padarr(batch.chip_cols[k])
+                       for k in costmodel.SWEEP_GATHER_FIELDS})
+        return arrays
+
+    def _sweep_tile_reduced(self, batch: dse.CandidateBatch
+                            ) -> costmodel.SweepReduced:
+        """ONE fused launch: all workloads x one padded tile, skyline-reduced
+        on device."""
+        arrays = self._padded_tile_arrays(batch)
+        cons = self.constraint
+        if self.evaluator == "pallas":
+            from repro.kernels import ops
+            from repro.kernels.dse_sweep import pack_cand_cols
+            return ops.dse_sweep(
+                pack_cand_cols(arrays), self._wl_cols, sim=self.sim,
+                constraint=cons, max_survivors=self.max_survivors,
+                n_valid=len(batch))
+        return costmodel.sweep_workloads_reduced_jit(
+            self._wl_cols,
+            {k: arrays[k] for k in costmodel.SWEEP_GATHER_FIELDS},
+            arrays["n_chips"], arrays["freq_mhz"], arrays["mesh_pod"],
+            arrays["mesh_data"], arrays["mesh_model"], arrays["valid"],
+            sim=self.sim, max_power_w=cons.max_power_w,
+            max_latency_s=cons.max_latency_s, min_hbm_fit=cons.min_hbm_fit,
+            max_survivors=self.max_survivors)
+
+    def _merge_reduced_tile(self, red: costmodel.SweepReduced, lo: int,
+                            n: int, tile_no: int) -> None:
+        """Fold one fused launch into every workload's frontier — reduced
+        merges with lazily materialized survivor ``Candidate`` objects; the
+        (rare) skyline overflow falls back to a raw full-tile merge."""
+        fallback_cands = None
+        for wi, wl in enumerate(self.workloads):
+            fr = self.frontiers[(wl.arch, wl.shape)]
+            if red.overflowed(wi):
+                if fallback_cands is None:
+                    fallback_cands = self.space.slice(lo, lo + n).candidates
+                fr.merge(fallback_cands,
+                         np.asarray(red.energy_full)[wi][:n].astype(np.float64),
+                         np.asarray(red.latency_full)[wi][:n].astype(np.float64),
+                         np.asarray(red.feasible_full)[wi][:n],
+                         indices=np.arange(lo, lo + n, dtype=np.int64),
+                         tile=tile_no)
+                continue
+            k = int(red.n_survivors[wi])
+            local = red.surv_idx[wi][:k].astype(np.int64)
+            gidx = lo + local
+            cands = self.space.candidates_at(gidx)
+            fr.merge_reduced(
+                cands, red.surv_energy[wi][:k].astype(np.float64),
+                red.surv_latency[wi][:k].astype(np.float64), gidx,
+                span=(lo, lo + n), n_feasible=int(red.n_feasible[wi]),
+                ref_energy_j=float(red.ref_energy[wi]),
+                ref_latency_s=float(red.ref_latency[wi]), tile=tile_no)
+
     # -- the sweep ----------------------------------------------------------
 
     def run(self, checkpoint_path: Optional[str] = None,
@@ -215,23 +406,34 @@ class Campaign:
         persisted every ``checkpoint_every`` tiles and at the end."""
         t_start = time.perf_counter()
         done_this_call = 0
-        for tile_no, lo, batch in self.space.tiles(start_tile=self.next_tile):
-            if max_tiles is not None and done_this_call >= max_tiles:
-                break
-            t0 = time.perf_counter()
-            indices = np.arange(lo, lo + len(batch), dtype=np.int64)
-            for wl in self.workloads:
-                energy, latency, feasible = self._evaluate_tile(wl, batch)
-                self.frontiers[(wl.arch, wl.shape)].merge(
-                    batch.candidates, energy, latency, feasible,
-                    indices=indices, tile=tile_no)
-            self.tile_stats.append(TileStat(
-                tile=tile_no, candidates=len(batch) * len(self.workloads),
-                wall_s=time.perf_counter() - t0))
-            self.next_tile = tile_no + 1
-            done_this_call += 1
-            if checkpoint_path and (self.next_tile % self.checkpoint_every == 0):
-                store.save_checkpoint(self.state_dict(), checkpoint_path)
+        fused = self.fused
+        tiles = _TilePrefetcher(self.space.tiles(
+            start_tile=self.next_tile, with_candidates=not fused))
+        try:
+            for tile_no, lo, batch in tiles:
+                if max_tiles is not None and done_this_call >= max_tiles:
+                    break
+                t0 = time.perf_counter()
+                if fused:
+                    red = self._sweep_tile_reduced(batch)
+                    self._merge_reduced_tile(red, lo, len(batch), tile_no)
+                else:
+                    indices = np.arange(lo, lo + len(batch), dtype=np.int64)
+                    for wl in self.workloads:
+                        energy, latency, feasible = self._evaluate_tile(wl, batch)
+                        self.frontiers[(wl.arch, wl.shape)].merge(
+                            batch.candidates, energy, latency, feasible,
+                            indices=indices, tile=tile_no)
+                self.tile_stats.append(TileStat(
+                    tile=tile_no,
+                    candidates=len(batch) * len(self.workloads),
+                    wall_s=time.perf_counter() - t0))
+                self.next_tile = tile_no + 1
+                done_this_call += 1
+                if checkpoint_path and (self.next_tile % self.checkpoint_every == 0):
+                    store.save_checkpoint(self.state_dict(), checkpoint_path)
+        finally:
+            tiles.close()
         if checkpoint_path:
             store.save_checkpoint(self.state_dict(), checkpoint_path)
         return self._result(time.perf_counter() - t_start)
@@ -265,6 +467,7 @@ class Campaign:
             "constraint": dataclasses.asdict(self.constraint),
             "sim": dataclasses.asdict(self.sim),
             "evaluator": self.evaluator,
+            "pipeline": self.pipeline,
             "next_tile": self.next_tile,
             "tile_stats": [s.as_dict() for s in self.tile_stats],
             "frontiers": {f"{arch}|{shape}": fr.state_dict()

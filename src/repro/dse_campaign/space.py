@@ -155,19 +155,37 @@ class SpaceSpec:
 
     def candidate(self, i: int) -> Candidate:
         """Materialize the single candidate at flat index ``i``."""
-        n = len(self)
-        if not 0 <= i < n:
-            raise IndexError(f"index {i} out of range for space of {n}")
-        row, k = divmod(i, self.freq_points)
-        r = self._rows[row]
-        freq = float(self._freqs(np.asarray([row]), np.asarray([k]))[0])
-        return Candidate(r.chip, r.n_chips, r.mesh, freq)
+        return self.candidates_at([i])[0]
 
-    def slice(self, lo: int, hi: int) -> CandidateBatch:
+    def candidates_at(self, indices) -> list:
+        """Materialize the candidates at arbitrary flat ``indices``, batched.
+
+        The lazy-survivor path of the fused campaign evaluators: a whole
+        tile streams through the device candidate-less, and only its
+        frontier survivors (typically tens per tile) become ``Candidate``
+        objects — in one vectorized pass instead of a per-index ``divmod``
+        + frequency recomputation."""
+        idx = np.asarray(indices, np.int64)
+        n = len(self)
+        if idx.size and (idx.min() < 0 or idx.max() >= n):
+            raise IndexError(f"indices outside [0, {n}): "
+                             f"[{idx.min()}, {idx.max()}]")
+        row, k = np.divmod(idx, self.freq_points)
+        freq = self._freqs(row, k)
+        rows = self._rows
+        return [Candidate(rows[r].chip, rows[r].n_chips, rows[r].mesh,
+                          float(f)) for r, f in zip(row, freq)]
+
+    def slice(self, lo: int, hi: int,
+              with_candidates: bool = True) -> CandidateBatch:
         """Candidates [lo, hi) as a ``CandidateBatch``, built array-natively.
 
         Any sub-range of the space is addressable without touching the rest —
         this is what makes campaigns resumable from an arbitrary tile index.
+        ``with_candidates=False`` skips the per-candidate ``Candidate``
+        construction (the only O(tile) Python cost of a slice) and returns an
+        array-only batch — the zero-copy campaign paths materialize scalar
+        candidates lazily via ``candidate(i)`` for frontier survivors only.
         """
         n = len(self)
         lo, hi = max(lo, 0), min(hi, n)
@@ -179,9 +197,12 @@ class SpaceSpec:
         chip_idx = cols["chip_idx"][row]
         freq = self._freqs(row, k)
         rows = self._rows
-        candidates = tuple(
-            Candidate(rows[r].chip, rows[r].n_chips, rows[r].mesh, float(f))
-            for r, f in zip(row, freq))
+        candidates = None
+        if with_candidates:
+            candidates = tuple(
+                Candidate(rows[r].chip, rows[r].n_chips, rows[r].mesh,
+                          float(f))
+                for r, f in zip(row, freq))
         return CandidateBatch(
             candidates=candidates,
             chip_idx=chip_idx,
@@ -192,18 +213,21 @@ class SpaceSpec:
             mesh_pod=cols["mesh_pod"][row],
             chip_cols=CHIP_TABLE.gather(chip_idx))
 
-    def tiles(self, start_tile: int = 0, chunk_size: int = None
+    def tiles(self, start_tile: int = 0, chunk_size: int = None,
+              with_candidates: bool = True
               ) -> Iterator[Tuple[int, int, CandidateBatch]]:
         """Stream the space as (tile_index, flat_lo, batch) chunks.
 
         Each batch holds at most ``chunk_size`` candidates; ``start_tile``
         skips already-evaluated prefixes on resume without materializing them.
+        ``with_candidates=False`` streams array-only batches (see ``slice``).
         """
         c = chunk_size or self.chunk_size
         n = len(self)
         for t in range(start_tile, self.n_tiles(c)):
             lo = t * c
-            yield t, lo, self.slice(lo, min(lo + c, n))
+            yield t, lo, self.slice(lo, min(lo + c, n),
+                                    with_candidates=with_candidates)
 
     # -- persistence --------------------------------------------------------
 

@@ -1,0 +1,166 @@
+"""Fused DSE-sweep Pallas kernel: the campaign evaluator as ONE launch.
+
+The streaming campaign's hot loop is not a neural-net op — it is the cost
+model itself, evaluated over millions of (workload x candidate) pairs.  This
+kernel moves the whole per-tile pipeline on device: census scaling
+(``costmodel.scale_census``), the topology-aware roofline simulation
+(``costmodel.simulate_batch`` with ``xp=jnp`` — literally the same function
+the numpy oracle path runs, so the arithmetic cannot diverge), and the
+constraint mask (``costmodel.sweep_feasibility``), for every cached workload
+in one ``pallas_call``.
+
+Layout: candidates arrive as one packed [len(CAND_COLS), N] column matrix
+(lane-padded to 128, padding lanes carry ``valid=0``); per-workload scalars
+as the packed [W, len(WL_COLS)] matrix, broadcast as a leading data axis
+([W, 1] x [1, N] -> [W, N]) so the kernel body is W-independent — all
+elementwise VPU math, no gathers, no host round-trips between workloads.
+
+Precision tiers: in interpret mode (CPU CI / debugging) the whole sweep runs
+float64 under a scoped ``jax.experimental.enable_x64`` so the resulting
+frontier holds the float64 numpy evaluator's exact candidate set (values
+agree to ~1 ulp — XLA fusion noise only); compiled on an accelerator it
+runs float32 (the same tier as ``simulate_batch_jit``, ~1e-6 relative).
+
+The jitted wrapper fuses the per-tile skyline pre-reduction
+(``costmodel._screen_rows`` — a conservative dominance screen whose
+survivors are a guaranteed superset of the tile's feasible Pareto set)
+behind the kernel, so the frontier merge only ever handles O(survivors)
+per tile — the same ``SweepReduced`` contract as the jit reference path
+``costmodel.sweep_workloads_reduced_jit``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import costmodel
+
+# packed candidate-column order of the [len(CAND_COLS), N] matrix the kernel
+# consumes: batch axes first, then the gathered chip-table columns
+CAND_COLS = ("n_chips", "freq_mhz", "mesh_pod", "mesh_data", "mesh_model",
+             "valid") + costmodel.SWEEP_GATHER_FIELDS
+
+LANE = 128   # TPU lane width; candidate tiles are padded to a multiple
+
+
+def _sweep_kernel(wl_ref, cand_ref, e_ref, l_ref, f_ref, *,
+                  sim: costmodel.SimConfig, max_power_w, max_latency_s,
+                  min_hbm_fit: bool):
+    """All workloads x the whole candidate tile in one kernel body.
+
+    The workload axis is a broadcast DATA axis — per-workload scalars enter
+    as [W, 1] column slices against the [1, N] candidate rows, so every
+    simulation step is a single [W, N] elementwise op and the traced graph
+    is independent of the workload count (no per-workload unrolling)."""
+    col = {name: cand_ref[i:i + 1, :] for i, name in enumerate(CAND_COLS)}
+    wl = {name: wl_ref[:, i:i + 1] for i, name in enumerate(costmodel.WL_COLS)}
+    ana = costmodel.scale_census(wl, wl["base_chips"], col["n_chips"], xp=jnp)
+    batch = costmodel.simulate_batch(
+        ana, None, col["n_chips"], col["freq_mhz"], sim=sim, xp=jnp,
+        gathered={f: col[f] for f in costmodel.SIM_GATHER_FIELDS},
+        mesh_pod=col["mesh_pod"], mesh_data=col["mesh_data"],
+        mesh_model=col["mesh_model"])
+    feas = costmodel.sweep_feasibility(
+        batch.power_w, batch.latency_s, col["n_chips"], col["hbm_bytes"],
+        wl["base_chips"], wl["state_gb_per_device"], col["valid"],
+        max_power_w, max_latency_s, min_hbm_fit, xp=jnp)
+    e_ref[...] = jnp.broadcast_to(batch.energy_j, e_ref.shape)
+    l_ref[...] = jnp.broadcast_to(batch.latency_s, l_ref.shape)
+    f_ref[...] = feas.astype(e_ref.dtype)
+
+
+def dse_sweep_pallas(cand_cols, wl_cols, *, sim: costmodel.SimConfig,
+                     max_power_w=None, max_latency_s=None,
+                     min_hbm_fit: bool = True, interpret: bool = True):
+    """Raw kernel launch: (energy, latency, feasible) as [W, N] arrays.
+
+    ``cand_cols`` is the packed [len(CAND_COLS), N] candidate matrix with N a
+    multiple of ``LANE``; ``wl_cols`` the [W, len(WL_COLS)] workload matrix.
+    """
+    ncol, n = cand_cols.shape
+    if ncol != len(CAND_COLS):
+        raise ValueError(f"cand_cols must be [{len(CAND_COLS)}, N] "
+                         f"({CAND_COLS}), got {cand_cols.shape}")
+    w_count = wl_cols.shape[0]
+    kernel = functools.partial(
+        _sweep_kernel, sim=sim, max_power_w=max_power_w,
+        max_latency_s=max_latency_s, min_hbm_fit=min_hbm_fit)
+    dt = cand_cols.dtype
+    return pl.pallas_call(
+        kernel,
+        out_shape=[jax.ShapeDtypeStruct((w_count, n), dt)] * 3,
+        interpret=interpret,
+    )(wl_cols, cand_cols)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_dse_sweep(sim: costmodel.SimConfig, max_power_w, max_latency_s,
+                   min_hbm_fit: bool, interpret: bool):
+    def run(cand_cols, wl_cols):
+        e, l, f = dse_sweep_pallas(
+            cand_cols, wl_cols, sim=sim, max_power_w=max_power_w,
+            max_latency_s=max_latency_s, min_hbm_fit=min_hbm_fit,
+            interpret=interpret)
+        feas = f > 0
+        return costmodel._screen_rows(e, l, feas) + (e, l, feas)
+
+    return jax.jit(run)
+
+
+def pack_cand_cols(arrays: dict, dtype=np.float64) -> np.ndarray:
+    """Stack the ``CAND_COLS`` entries of ``arrays`` into the packed matrix."""
+    return np.stack([np.asarray(arrays[k], dtype) for k in CAND_COLS])
+
+
+def _pad_lanes(cand_cols: np.ndarray, n_valid: int) -> np.ndarray:
+    """Right-pad the lane axis to a ``LANE`` multiple; padding lanes copy
+    lane 0 (safe arithmetic — no zero divides) with ``valid`` forced to 0."""
+    n = cand_cols.shape[1]
+    target = -(-max(n, 1) // LANE) * LANE
+    if n < target:
+        fill = np.repeat(cand_cols[:, :1], target - n, axis=1)
+        cand_cols = np.concatenate([cand_cols, fill], axis=1)
+    if n_valid < cand_cols.shape[1]:
+        valid_row = CAND_COLS.index("valid")
+        cand_cols = cand_cols.copy()
+        cand_cols[valid_row, n_valid:] = 0.0
+    return cand_cols
+
+
+def dse_sweep_reduced(cand_cols: np.ndarray, wl_cols: np.ndarray, *,
+                      sim: costmodel.SimConfig = costmodel.SimConfig(),
+                      max_power_w: Optional[float] = None,
+                      max_latency_s: Optional[float] = None,
+                      min_hbm_fit: bool = True,
+                      max_survivors: int = 2048,
+                      n_valid: Optional[int] = None,
+                      interpret: bool = True) -> costmodel.SweepReduced:
+    """Fused sweep + on-device skyline reduction of one candidate tile.
+
+    ``cand_cols`` [len(CAND_COLS), N] / ``wl_cols`` [W, len(WL_COLS)] as
+    float64 numpy; ``n_valid`` marks the real (un-padded) tile length.
+    Returns the ``SweepReduced`` contract shared with the jit reference
+    path.  Interpret mode computes in float64 (scoped x64): the campaign
+    frontier it produces holds the numpy evaluator's exact candidate set,
+    with values agreeing to ~1 ulp (XLA fusion noise only).  Compiled mode
+    computes in float32.
+    """
+    n = cand_cols.shape[1]
+    n_valid = n if n_valid is None else int(n_valid)
+    cand_cols = _pad_lanes(np.asarray(cand_cols, np.float64), n_valid)
+    wl_cols = np.asarray(wl_cols, np.float64)
+    fn = _jit_dse_sweep(sim, max_power_w, max_latency_s, bool(min_hbm_fit),
+                        bool(interpret))
+    if interpret:
+        import jax.experimental
+        with jax.experimental.enable_x64():
+            out = fn(cand_cols, wl_cols)
+    else:
+        out = fn(cand_cols.astype(np.float32), wl_cols.astype(np.float32))
+    return costmodel.build_sweep_reduced(out, int(max_survivors))

@@ -1,29 +1,54 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-These are the entry points models/benchmarks use; each handles layout
-(GQA head expansion, padding) and dispatches to the kernel.  ``interpret``
-defaults to True because this container is CPU-only; on real TPU the same
-call sites pass interpret=False.
+These are the entry points models/benchmarks/campaigns use; each handles
+layout (GQA head expansion, padding, column packing) and dispatches to the
+kernel.  ``interpret`` defaults to auto-detection from the active JAX
+backend (``default_interpret``): compiled on TPU, interpreted everywhere
+else, overridable per call (``interpret=`` kwarg) or per process
+(``REPRO_PALLAS_INTERPRET=0/1``).  Resolution happens BEFORE the jit
+boundary so the env override is honored even across cached traces.
 """
 
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import costmodel
 from repro.kernels.conv2d import conv2d_pallas
+from repro.kernels.dse_sweep import (CAND_COLS, dse_sweep_reduced,
+                                     pack_cand_cols)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 
+def default_interpret() -> bool:
+    """Whether Pallas kernels should run in interpret mode by default.
+
+    Auto-detects from ``jax.default_backend()`` — compiled kernels on TPU,
+    interpret mode on CPU/GPU backends (this container is CPU-only, so CI
+    exercises interpret mode end to end).  The ``REPRO_PALLAS_INTERPRET``
+    env var overrides the detection; an explicit ``interpret=`` kwarg on any
+    wrapper overrides both.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "off")
+    return jax.default_backend() != "tpu"
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
                                              "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True,
-                    block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True):
-    """q: [B, S, H, hd]; k, v: [B, S, KV, hd] (GQA expanded here)."""
+def _flash_attention(q, k, v, *, causal: bool, block_q: int, block_k: int,
+                     interpret: bool):
     B, S, H, hd = q.shape
     KV = k.shape[2]
     if KV != H:
@@ -40,18 +65,30 @@ def flash_attention(q, k, v, *, causal: bool = True,
     return o.reshape(B, H, S, hv).transpose(0, 2, 1, 3)
 
 
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    """q: [B, S, H, hd]; k, v: [B, S, KV, hd] (GQA expanded here)."""
+    return _flash_attention(q, k, v, causal=causal, block_q=block_q,
+                            block_k=block_k,
+                            interpret=_resolve_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = True):
-    """Mamba2 SSD scan: x [b,S,nh,hp], dt [b,S,nh], A [nh], B/C [b,S,1,ds]."""
+def _ssd_scan(x, dt, A, B, C, *, chunk: int, interpret: bool):
     return ssd_scan_pallas(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128,
+             interpret: Optional[bool] = None):
+    """Mamba2 SSD scan: x [b,S,nh,hp], dt [b,S,nh], A [nh], B/C [b,S,1,ds]."""
+    return _ssd_scan(x, dt, A, B, C, chunk=chunk,
+                     interpret=_resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "tile_h",
                                              "interpret"))
-def conv2d(x, w, *, stride: int = 1, padding: str = "SAME", tile_h: int = 8,
-           interpret: bool = True):
-    """NHWC conv via the Pallas kernel (stride-1 path); strided convs fall
-    back to XLA (they are 1x1 projections in ResNet, already MXU-shaped)."""
+def _conv2d(x, w, *, stride: int, padding: str, tile_h: int, interpret: bool):
     kh, kw = w.shape[:2]
     if stride != 1:
         return jax.lax.conv_general_dilated(
@@ -61,3 +98,36 @@ def conv2d(x, w, *, stride: int = 1, padding: str = "SAME", tile_h: int = 8,
         x = jnp.pad(x, ((0, 0), (kh // 2, (kh - 1) // 2),
                         (kw // 2, (kw - 1) // 2), (0, 0)))
     return conv2d_pallas(x, w, tile_h=tile_h, interpret=interpret)
+
+
+def conv2d(x, w, *, stride: int = 1, padding: str = "SAME", tile_h: int = 8,
+           interpret: Optional[bool] = None):
+    """NHWC conv via the Pallas kernel (stride-1 path); strided convs fall
+    back to XLA (they are 1x1 projections in ResNet, already MXU-shaped)."""
+    return _conv2d(x, w, stride=stride, padding=padding, tile_h=tile_h,
+                   interpret=_resolve_interpret(interpret))
+
+
+def dse_sweep(cand_cols, wl_cols, *,
+              sim: costmodel.SimConfig = costmodel.SimConfig(),
+              constraint=None, max_survivors: int = 2048,
+              n_valid: Optional[int] = None,
+              interpret: Optional[bool] = None) -> costmodel.SweepReduced:
+    """Fused on-device campaign evaluator (see ``kernels.dse_sweep``).
+
+    One launch evaluates all workload rows of ``wl_cols`` against the packed
+    candidate tile ``cand_cols`` and reduces each to its feasible Pareto
+    survivors + frontier-accounting aggregates.  ``constraint`` duck-types
+    ``dse.Constraint`` (``max_power_w`` / ``max_latency_s`` /
+    ``min_hbm_fit``); interpret mode (the CPU default) computes float64 —
+    campaign frontiers then hold the numpy evaluator's exact candidate set
+    — and compiled mode computes float32.
+    """
+    kw = dict(max_power_w=None, max_latency_s=None, min_hbm_fit=True)
+    if constraint is not None:
+        kw = dict(max_power_w=constraint.max_power_w,
+                  max_latency_s=constraint.max_latency_s,
+                  min_hbm_fit=constraint.min_hbm_fit)
+    return dse_sweep_reduced(cand_cols, wl_cols, sim=sim,
+                             max_survivors=max_survivors, n_valid=n_valid,
+                             interpret=_resolve_interpret(interpret), **kw)
