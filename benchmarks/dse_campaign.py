@@ -17,6 +17,18 @@ fused frontiers for the CI evaluator diff.  Gates (after artifacts are
 written): pallas must reproduce the numpy frontier's exact candidate set
 with hypervolume within 1e-6 relative, and the fused pallas pipeline must
 beat the jit baseline's throughput by >= 3x.
+
+Finally the distributed matrix: the same default campaign through the
+multiprocess fabric at 1 and 2 workers on the jit evaluator — including a
+2-worker run with an injected worker crash mid-tile plus a duplicated
+payload delivery — persisted as ``BENCH_distributed_campaign.json``.
+Gates: every fabric frontier must be BITWISE-identical to the
+single-process jit frontier, and 2 workers must reach >= 1.8x the
+1-worker candidates/sec on the busy-CPU clock (total candidate evaluations
+divided by the slowest worker's summed per-tile ``time.process_time`` —
+CPU actually burned on tiles, excluding compile warm-up, so the scaling
+row measures work-splitting rather than host core count; the wall-clock
+window from all-workers-ready to last fold is reported unguarded).
 """
 
 from __future__ import annotations
@@ -31,9 +43,10 @@ import numpy as np
 from benchmarks.common import (ART_DIR, OUT_DIR, csv_row, ensure_artifacts,
                                write_report)
 from repro.core import costmodel, dse
-from repro.dse_campaign import (Campaign, canonical_frontier,
-                                candidate_to_dict, default_campaign_space,
-                                frontiers_identical, hypervolume_2d, store)
+from repro.dse_campaign import (Campaign, FaultInjection, MultiprocessFabric,
+                                canonical_frontier, candidate_to_dict,
+                                default_campaign_space, frontiers_identical,
+                                hypervolume_2d, store)
 from repro.hw import get_chip, mesh_factorizations
 
 EVAL_REPEATS = 3          # best-of runs per evaluator (benchmarks.common.timed
@@ -43,6 +56,8 @@ FUSED_CHUNK = 32768       # fused evaluators amortize per-launch overhead over
                           # invariant (tests/test_dse_campaign.py), so this is
                           # an execution detail, not a space change
 EVALUATOR_BENCH_NAME = "BENCH_evaluator_speedup.json"
+DISTRIBUTED_BENCH_NAME = "BENCH_distributed_campaign.json"
+SCALING_GATE = 1.8        # 2-worker busy-CPU throughput vs 1 worker
 
 
 def mesh_tie_report(wl: dse.Workload, chip_name: str = "tpu-v5e",
@@ -192,6 +207,112 @@ def evaluator_matrix(workloads, cons, numpy_result, refs) -> tuple:
     return payload, lines, rows
 
 
+def distributed_matrix(workloads, cons) -> tuple:
+    """The fabric scaling + identity matrix on the default campaign space.
+
+    Runs the default jit campaign single-process (the bitwise reference),
+    then through ``MultiprocessFabric`` at 1 worker, 2 workers, and
+    2 workers with the full injected-failure script (worker crash mid-tile
+    + duplicated payload delivery).  Throughput is busy-CPU based: total
+    candidate evaluations / the slowest worker's summed per-tile
+    ``process_time`` — a machine-independent work-splitting metric that
+    holds on single-core CI runners where two workers cannot beat one on
+    wall clock.  Returns (payload, report_lines, csv_rows).
+    """
+    spec = default_campaign_space()
+    single = Campaign(workloads, spec, constraint=cons, evaluator="jit").run()
+    assert single.complete
+    total_cands = single.candidates_evaluated
+
+    configs = [
+        ("1-worker", 1, None),
+        ("2-worker", 2, None),
+        ("2-worker-faults", 2, FaultInjection(kill_worker=1,
+                                              kill_after_tiles=1,
+                                              duplicate=True)),
+    ]
+    runs = {}
+    for name, n_workers, fault in configs:
+        campaign = Campaign(workloads, spec, constraint=cons, evaluator="jit")
+        fabric = MultiprocessFabric(campaign, n_workers=n_workers,
+                                    fault=fault, lease_timeout_s=600.0)
+        result = fabric.run()
+        assert result.complete, (name, result.tiles_done, result.n_tiles)
+        stats = fabric.stats
+        identical = all(
+            frontiers_identical(single.frontiers[k], result.frontiers[k])
+            for k in single.frontiers)
+        runs[name] = {
+            "n_workers": n_workers,
+            "identical_to_single_process": identical,
+            "cands_per_busy_sec": total_cands
+            / max(stats["max_worker_busy_s"], 1e-9),
+            "worker_busy_s": {str(w): b
+                              for w, b in sorted(stats["worker_busy_s"].items())},
+            "max_worker_busy_s": stats["max_worker_busy_s"],
+            "total_busy_s": stats["total_busy_s"],
+            "window_s": stats["window_s"],
+            "deliveries": stats["deliveries"],
+            "duplicates": stats["duplicates"],
+            "reissued_tiles": stats["reissued_tiles"],
+            "lost_workers": stats["lost_workers"],
+        }
+    faults = runs["2-worker-faults"]
+    assert faults["lost_workers"], "injected worker crash never fired"
+    assert faults["duplicates"] >= 1, "duplicate delivery never folded"
+    scaling = (runs["2-worker"]["cands_per_busy_sec"]
+               / runs["1-worker"]["cands_per_busy_sec"])
+    all_identical = all(r["identical_to_single_process"]
+                       for r in runs.values())
+
+    payload = {
+        "bench": "dse_distributed_campaign",
+        "python": platform.python_version(),
+        "sim_model_version": costmodel.SIM_MODEL_VERSION,
+        "space": spec.to_dict(),
+        "evaluator": "jit",
+        "workloads": sorted(f"{a}|{s}" for a, s in single.frontiers),
+        "candidates_evaluated": total_cands,
+        "single_process": {
+            "cands_per_busy_sec": total_cands / max(single.sweep_wall_s, 1e-9),
+            "sweep_wall_s": single.sweep_wall_s,
+        },
+        "runs": runs,
+        "scaling_2w_vs_1w": scaling,
+        "scaling_gate": SCALING_GATE,
+        "all_identical_to_single_process": all_identical,
+        "hv": final_hv(single),
+    }
+    lines = ["", f"## distributed fabric ({len(single.frontiers)} workloads, "
+             f"{spec.n_tiles()} tiles, jit evaluator)", ""]
+    for name, row in runs.items():
+        busy = ", ".join(f"w{w}={b:.2f}s"
+                         for w, b in row["worker_busy_s"].items())
+        lines.append(
+            f"  {name:>16}: {row['cands_per_busy_sec']:>12,.0f} cands/busy-sec "
+            f"(busy {busy}; window {row['window_s']:5.2f}s; "
+            f"{row['duplicates']} dup, {row['reissued_tiles']} reissued, "
+            f"lost {row['lost_workers']}) "
+            f"identical={row['identical_to_single_process']}")
+    lines += [
+        f"  2-worker scaling vs 1-worker (busy-CPU): {scaling:.2f}x "
+        f"(gate >= {SCALING_GATE}x)",
+        f"  all fabric frontiers bitwise == single process: {all_identical}",
+    ]
+    rows = [csv_row(f"dse_distributed_{name}",
+                    1e6 / max(row["cands_per_busy_sec"], 1e-9),
+                    f"cands_per_busy_sec={row['cands_per_busy_sec']:.0f};"
+                    f"workers={row['n_workers']};"
+                    f"identical={row['identical_to_single_process']}")
+            for name, row in runs.items()]
+    rows.append(csv_row("dse_distributed_scaling", 0.0,
+                        f"scaling_2w_vs_1w={scaling:.2f}x;"
+                        f"identical={all_identical};"
+                        f"faults_lost={faults['lost_workers']};"
+                        f"faults_dup={faults['duplicates']}"))
+    return payload, lines, rows
+
+
 def run() -> list:
     ensure_artifacts()
     spec = default_campaign_space()
@@ -278,9 +399,18 @@ def run() -> list:
     with open(eval_path, "w") as f:
         json.dump(eval_payload, f, indent=1)
     report.append(f"  artifact: {eval_path}")
+
+    # distributed fabric: N workers, one frontier, same bits
+    dist_payload, dist_lines, dist_rows = distributed_matrix(
+        campaign.workloads, cons)
+    report += dist_lines
+    dist_path = os.path.join(OUT_DIR, DISTRIBUTED_BENCH_NAME)
+    with open(dist_path, "w") as f:
+        json.dump(dist_payload, f, indent=1)
+    report.append(f"  artifact: {dist_path}")
     write_report("dse_campaign.md", "\n".join(report))
 
-    rows = eval_rows + [
+    rows = eval_rows + dist_rows + [
         csv_row("dse_campaign_throughput", us_per_cand,
                 f"cands_per_sec={result.candidates_per_sec:.0f};"
                 f"space={n_cands};tiles={result.n_tiles};"
@@ -304,9 +434,16 @@ def run() -> list:
         "pallas evaluator frontier candidate set diverged from numpy"
     assert pvn["max_hv_rel_diff"] <= 1e-6, \
         f"pallas hypervolume drifted {pvn['max_hv_rel_diff']:.2e} (> 1e-6)"
+    assert dist_payload["all_identical_to_single_process"], \
+        "a distributed fabric frontier diverged from the single-process run"
+    # throughput gates LAST: machine-sensitive, must never mask a
+    # correctness verdict above
     speedup = eval_payload["speedup_pallas_vs_jit_baseline"]
     assert speedup >= 3.0, \
         f"fused pallas pipeline only {speedup:.2f}x over the jit baseline"
+    scaling = dist_payload["scaling_2w_vs_1w"]
+    assert scaling >= SCALING_GATE, \
+        f"2-worker fabric only {scaling:.2f}x over 1 worker (busy-CPU)"
     return rows
 
 

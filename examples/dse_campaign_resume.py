@@ -7,7 +7,7 @@ instead of restarting.  This demo runs a campaign over all cached dry-run
 workloads, kills it mid-sweep, resumes from the checkpoint, and shows the
 final frontier is IDENTICAL to an uninterrupted fresh run.
 
-  PYTHONPATH=src python examples/dse_campaign_resume.py [--evaluator pallas]
+  python examples/dse_campaign_resume.py [--evaluator pallas]
 
 ``--evaluator`` selects the tile engine (numpy / jit / pallas); CI runs the
 pallas-interpret variant in its gating matrix as the fused-kernel smoke.

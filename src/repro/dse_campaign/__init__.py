@@ -1,30 +1,44 @@
 """Streaming DSE campaigns: generator-backed mega-spaces, incremental Pareto
-frontiers, resumable orchestration, persisted trajectory artifacts.
+frontiers, resumable orchestration, persisted trajectory artifacts — and a
+distributed fabric that shards a campaign across workers.
 
 The layer between the batch primitives (``repro.core.dse`` /
 ``repro.core.costmodel``) and the report scripts: a ``SpaceSpec`` describes a
 100-1000x larger space than ``dse.default_space`` without materializing it, a
 ``Campaign`` streams it tile-by-tile over every cached workload with
 checkpoint/resume, and each workload's ``StreamingFrontier`` maintains a
-skyline provably identical to one-shot ``dse.pareto_search``.
+skyline provably identical to one-shot ``dse.pareto_search``.  The
+``fabric`` module distributes the same sweep across worker processes —
+coordinator leases tile indices, workers ship ``TileReduction`` payloads —
+with a frontier bitwise-identical to the single-process run regardless of
+worker count, interleaving, or worker loss.
 """
 
+from repro.dse_campaign.fabric import (FabricCoordinator, FakeClock,
+                                       FaultInjection, LeaseBoard,
+                                       LocalFabric, MultiprocessFabric,
+                                       campaign_config, evaluator_from_config,
+                                       run_distributed, tile_span)
 from repro.dse_campaign.frontier import (FrontierSnapshot, StreamingFrontier,
                                          candidate_from_dict,
                                          candidate_to_dict,
                                          canonical_frontier,
                                          frontiers_identical,
                                          hypervolume_2d)
-from repro.dse_campaign.runner import Campaign, CampaignResult, TileStat
+from repro.dse_campaign.runner import (Campaign, CampaignResult, TileEvaluator,
+                                       TileReduction, TileStat)
 from repro.dse_campaign.space import (DEFAULT_VARIANTS, SliceVariant,
                                       SpaceSpec, default_campaign_space,
                                       tiny_campaign_space)
 from repro.dse_campaign import store
 
 __all__ = [
-    "Campaign", "CampaignResult", "DEFAULT_VARIANTS", "FrontierSnapshot",
-    "SliceVariant", "SpaceSpec", "StreamingFrontier", "TileStat",
-    "candidate_from_dict", "candidate_to_dict", "canonical_frontier",
-    "default_campaign_space", "frontiers_identical", "hypervolume_2d",
-    "store", "tiny_campaign_space",
+    "Campaign", "CampaignResult", "DEFAULT_VARIANTS", "FabricCoordinator",
+    "FakeClock", "FaultInjection", "FrontierSnapshot", "LeaseBoard",
+    "LocalFabric", "MultiprocessFabric", "SliceVariant", "SpaceSpec",
+    "StreamingFrontier", "TileEvaluator", "TileReduction", "TileStat",
+    "campaign_config", "candidate_from_dict", "candidate_to_dict",
+    "canonical_frontier", "default_campaign_space", "evaluator_from_config",
+    "frontiers_identical", "hypervolume_2d", "run_distributed", "store",
+    "tile_span", "tiny_campaign_space",
 ]

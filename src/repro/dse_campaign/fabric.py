@@ -1,0 +1,750 @@
+"""Distributed campaign fabric: many workers, one frontier.
+
+A campaign's unit of work is the tile index, and ``StreamingFrontier``
+merges are idempotent and commutative by global candidate index — so
+distribution is a ledger problem, not a numerics problem.  This module
+supplies the ledger:
+
+  * ``LeaseBoard`` — tile ownership: pending tiles are leased to workers,
+    completed tiles are retired, and a lost worker's leases return to the
+    pending pool for re-issue.
+  * ``FabricCoordinator`` — owns the ``Campaign`` state (frontiers, tile
+    stats, checkpoints); folds every delivered ``TileReduction`` via
+    ``Campaign.merge_reduction`` and drives the board plus a
+    ``HeartbeatMonitor`` (``repro.runtime.fault_tolerance``) for
+    lease-timeout expiry.  Pure bookkeeping — it never evaluates a tile —
+    and clock-injectable, so every failure path is deterministic in tests.
+  * ``LocalFabric`` — N simulated workers in one process with seeded
+    interleaving and scripted fault injection (kill / hang / duplicate):
+    the exhaustive-identity test harness.
+  * ``MultiprocessFabric`` — real ``spawn`` worker processes running
+    ``TileEvaluator`` loops, shipping ``TileReduction`` payloads
+    (O(survivors), cheap to pickle) over queues.  The transport is two
+    queue ends per worker; a multi-host fabric only needs to replace those
+    ends with sockets — the coordinator protocol is transport-agnostic.
+
+Delivery is at-least-once by design: the coordinator folds EVERY payload it
+receives, and span idempotence in ``StreamingFrontier.merge_reduced`` makes
+re-folds exact no-ops — a re-issued tile that was secretly completed, or a
+duplicated delivery, cannot perturb the frontier.  ``LeaseBoard.complete``
+is first-write-wins for the stats ledger only.
+
+THE invariant, gated in tests and ``benchmarks/dse_campaign.py``: for any
+worker count, any interleaving, any injected worker death or duplicated
+payload, the distributed frontier is bitwise-identical to the
+single-process ``Campaign.run`` frontier on the same (space, workloads,
+constraint, sim, evaluator).
+
+Worker processes use the ``spawn`` start method unconditionally: JAX
+runtimes are not fork-safe, and spawn children re-import ``repro`` cleanly
+from the parent's ``sys.path``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import multiprocessing as mp
+import os
+import queue as queue_mod
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import costmodel, dse
+from repro.dse_campaign import store
+from repro.dse_campaign.runner import (Campaign, CampaignResult, TileEvaluator,
+                                       TileReduction, TileStat,
+                                       workload_from_dict, workload_to_dict)
+from repro.dse_campaign.space import SpaceSpec
+from repro.runtime.fault_tolerance import HeartbeatMonitor
+
+WorkerId = Union[int, str]
+
+
+class FakeClock:
+    """Deterministic stand-in for ``time.monotonic``: time moves only when
+    the test calls ``advance``.  Injected into ``FabricCoordinator`` /
+    ``HeartbeatMonitor`` so lease expiry fires at an exact, repeatable
+    instant instead of depending on scheduler timing."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        """Move time forward ``dt`` seconds (time never moves on its own)."""
+        self.t += float(dt)
+
+
+def tile_span(space: SpaceSpec, tile: int) -> Tuple[int, int]:
+    """The flat candidate span [lo, hi) of ``tile`` — the same arithmetic
+    ``SpaceSpec.tiles`` uses, exposed for random tile access by workers."""
+    n_tiles = space.n_tiles()
+    if not 0 <= tile < n_tiles:
+        raise IndexError(f"tile {tile} outside [0, {n_tiles})")
+    lo = tile * space.chunk_size
+    return lo, min(lo + space.chunk_size, len(space))
+
+
+# ---------------------------------------------------------------------------
+# worker config: the picklable description of "what to evaluate"
+# ---------------------------------------------------------------------------
+
+def campaign_config(campaign: Union[Campaign, TileEvaluator]) -> Dict:
+    """The JSON/pickle-safe evaluator config shipped to fabric workers.
+
+    Stamps ``costmodel.SIM_MODEL_VERSION`` so a mixed-version fleet (one
+    worker built against a different cost model) is refused at worker
+    startup instead of silently splicing incomparable scores into one
+    frontier.  ``evaluator="fast"`` is refused here: fitted predictor
+    models do not serialize, so the fast path stays single-process.
+    """
+    eng = campaign.engine if isinstance(campaign, Campaign) else campaign
+    if eng.evaluator == "fast":
+        raise ValueError(
+            "evaluator='fast' cannot run on the fabric: fitted predictor "
+            "models are not serializable to workers — use 'numpy', 'jit' or "
+            "'pallas'")
+    return {
+        "sim_model_version": costmodel.SIM_MODEL_VERSION,
+        "space": eng.space.to_dict(),
+        "workloads": [workload_to_dict(wl) for wl in eng.workloads],
+        "constraint": dataclasses.asdict(eng.constraint),
+        "sim": dataclasses.asdict(eng.sim),
+        "evaluator": eng.evaluator,
+        "pipeline": eng.pipeline,
+        "max_survivors": eng.max_survivors,
+    }
+
+
+def evaluator_from_config(cfg: Dict) -> TileEvaluator:
+    """Rebuild a worker-side ``TileEvaluator`` from ``campaign_config``.
+
+    Refuses a config whose ``sim_model_version`` differs from this
+    process's ``costmodel.SIM_MODEL_VERSION`` — the distributed analogue of
+    the checkpoint-resume version gate.
+    """
+    version = cfg.get("sim_model_version")
+    if version != costmodel.SIM_MODEL_VERSION:
+        raise ValueError(
+            f"fabric config carries cost-model version {version!r} but this "
+            f"worker is built against {costmodel.SIM_MODEL_VERSION}; a "
+            "mixed-version fleet would fold incomparable scores into one "
+            "frontier")
+    return TileEvaluator(
+        [workload_from_dict(w) for w in cfg["workloads"]],
+        SpaceSpec.from_dict(cfg["space"]),
+        constraint=dse.Constraint(**cfg["constraint"]),
+        evaluator=cfg["evaluator"],
+        sim=costmodel.SimConfig(**cfg["sim"]),
+        pipeline=cfg["pipeline"],
+        max_survivors=cfg["max_survivors"])
+
+
+# ---------------------------------------------------------------------------
+# lease ledger
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Lease:
+    """One outstanding tile lease: ``worker`` owes the coordinator tile
+    ``tile``, issued at coordinator-clock time ``issued_at``."""
+
+    tile: int
+    worker: WorkerId
+    issued_at: float
+
+
+class LeaseBoard:
+    """Tile-ownership ledger for one campaign: every tile is exactly one of
+    *pending* (needs a worker), *leased* (a worker owes its reduction) or
+    *done* (folded into the frontier and retired).
+
+    Invariants:
+
+    * ``next_tile`` issues pending tiles smallest-first and never issues a
+      done tile, so the board converges even when a revoked tile is
+      completed by its original (presumed-dead) worker before re-issue;
+    * ``complete`` is first-write-wins: the first delivery of a tile
+      retires it, later duplicates report ``False`` (the caller still folds
+      them — frontier idempotence, not the board, is the dedup authority);
+    * ``revoke_worker`` returns a lost worker's leases to the pending pool;
+      nothing is ever lost, so ``all_done`` eventually holds as long as one
+      worker survives.
+    """
+
+    def __init__(self, n_tiles: int, done: Sequence[int] = ()):
+        if n_tiles < 1:
+            raise ValueError("n_tiles must be >= 1")
+        self.n_tiles = int(n_tiles)
+        self._done = {int(t) for t in done if 0 <= int(t) < n_tiles}
+        self._pending = sorted(set(range(self.n_tiles)) - self._done)
+        heapq.heapify(self._pending)
+        self._leases: Dict[int, Lease] = {}
+        self._prefix = 0
+
+    def next_tile(self, worker: WorkerId, now: float = 0.0) -> Optional[int]:
+        """Lease the smallest pending tile to ``worker`` (``None`` when no
+        tile is pending — outstanding leases may still re-pend later)."""
+        while self._pending:
+            tile = heapq.heappop(self._pending)
+            if tile in self._done or tile in self._leases:
+                continue
+            self._leases[tile] = Lease(tile, worker, now)
+            return tile
+        return None
+
+    def complete(self, tile: int) -> bool:
+        """Retire ``tile``; ``True`` only for the first completion."""
+        if not 0 <= tile < self.n_tiles:
+            raise IndexError(f"tile {tile} outside [0, {self.n_tiles})")
+        if tile in self._done:
+            return False
+        self._done.add(tile)
+        self._leases.pop(tile, None)
+        return True
+
+    def revoke_worker(self, worker: WorkerId) -> List[int]:
+        """Return all of ``worker``'s outstanding leases to the pending
+        pool (the lost-worker path); returns the re-pended tiles."""
+        tiles = sorted(t for t, l in self._leases.items() if l.worker == worker)
+        for t in tiles:
+            del self._leases[t]
+            heapq.heappush(self._pending, t)
+        return tiles
+
+    @property
+    def all_done(self) -> bool:
+        """True once every tile has completed (leases outstanding or not)."""
+        return len(self._done) == self.n_tiles
+
+    @property
+    def n_done(self) -> int:
+        """Completed tile count."""
+        return len(self._done)
+
+    @property
+    def done_tiles(self) -> List[int]:
+        """Sorted completed tile indices (checkpoint / observability view)."""
+        return sorted(self._done)
+
+    @property
+    def leases(self) -> Dict[int, Lease]:
+        """Snapshot copy of outstanding leases, keyed by tile."""
+        return dict(self._leases)
+
+    @property
+    def n_pending(self) -> int:
+        """Tiles neither done nor leased (the heap may hold stale entries
+        for revoked-then-completed tiles; they are filtered here)."""
+        return len([t for t in self._pending
+                    if t not in self._done and t not in self._leases])
+
+    def contiguous_done_prefix(self) -> int:
+        """First tile index NOT in the done set — the ``next_tile`` a plain
+        single-process ``Campaign.from_checkpoint`` resume starts at."""
+        while self._prefix in self._done:
+            self._prefix += 1
+        return self._prefix
+
+
+def _tile_intervals(tiles: Sequence[int]) -> List[List[int]]:
+    """Sorted tile indices -> half-open [lo, hi) interval list (compact
+    checkpoint encoding of the done set)."""
+    out: List[List[int]] = []
+    for t in sorted(tiles):
+        if out and t == out[-1][1]:
+            out[-1][1] = t + 1
+        else:
+            out.append([t, t + 1])
+    return out
+
+
+def _expand_intervals(intervals: Sequence[Sequence[int]]) -> List[int]:
+    """Inverse of ``_tile_intervals``."""
+    return [t for lo, hi in intervals for t in range(lo, hi)]
+
+
+# ---------------------------------------------------------------------------
+# coordinator
+# ---------------------------------------------------------------------------
+
+class FabricCoordinator:
+    """The single owner of campaign state in a distributed run.
+
+    Wraps a ``Campaign`` (whose frontiers/tile-stats/checkpoint it reuses
+    unchanged) with a ``LeaseBoard`` and a ``HeartbeatMonitor``.  Workers
+    interact through exactly three verbs:
+
+      * ``lease(worker)`` — claim the next pending tile (also a heartbeat);
+      * ``deliver(worker, tile, reduction)`` — ship a ``TileReduction``;
+        ALWAYS folded into the frontiers (at-least-once delivery — span
+        idempotence makes duplicates exact no-ops), first delivery retires
+        the tile and records its ``TileStat``;
+      * ``worker_lost(worker)`` / ``expire()`` — revoke a dead worker's
+        leases back to pending (explicit death vs. lease-timeout on the
+        injected clock).
+
+    Checkpoints keep the single-process schema (version 1) and add an
+    optional ``"fabric"`` key (done-tile intervals + outstanding leases);
+    ``next_tile`` is maintained as the contiguous done prefix, so a plain
+    ``Campaign.from_checkpoint`` resume of a fabric checkpoint is correct —
+    any out-of-prefix tiles it replays re-merge as exact no-ops.
+    """
+
+    def __init__(self, campaign: Campaign, lease_timeout_s: float = 300.0,
+                 clock=time.monotonic, done_tiles: Sequence[int] = ()):
+        self.campaign = campaign
+        prefix_done = range(campaign.next_tile)
+        self.board = LeaseBoard(campaign.space.n_tiles(),
+                                done=[*prefix_done, *done_tiles])
+        self.monitor = HeartbeatMonitor([], timeout_s=lease_timeout_s,
+                                        clock=clock)
+        self.stats = {"deliveries": 0, "duplicates": 0, "reissued_tiles": 0,
+                      "lost_workers": []}
+
+    @classmethod
+    def from_checkpoint(cls, path: str, lease_timeout_s: float = 300.0,
+                        clock=time.monotonic, **campaign_kwargs
+                        ) -> "FabricCoordinator":
+        """Resume a distributed campaign from a (fabric or single-process)
+        checkpoint; out-of-prefix tiles recorded under the ``"fabric"`` key
+        are marked done so they are not re-issued.  Leases recorded at
+        checkpoint time are NOT restored — a coordinator restart implicitly
+        revokes them, and the tiles simply re-pend."""
+        campaign = Campaign.from_checkpoint(path, **campaign_kwargs)
+        state = store.load_checkpoint(path)
+        fabric_state = state.get("fabric") or {}
+        done = _expand_intervals(fabric_state.get("done", []))
+        return cls(campaign, lease_timeout_s=lease_timeout_s, clock=clock,
+                   done_tiles=done)
+
+    # -- the three worker verbs --------------------------------------------
+
+    def register_worker(self, worker: WorkerId) -> None:
+        """Admit ``worker`` to heartbeat monitoring."""
+        self.monitor.register(worker)
+
+    def lease(self, worker: WorkerId) -> Optional[int]:
+        """Claim the next pending tile for ``worker`` (beats its heart)."""
+        self.monitor.beat(worker)
+        return self.board.next_tile(worker, now=self.monitor.clock())
+
+    def deliver(self, worker: WorkerId, tile: int, reduction: TileReduction,
+                busy_s: float = 0.0) -> bool:
+        """Fold one delivered ``TileReduction``; returns ``True`` iff this
+        was the tile's FIRST delivery (stats recorded), ``False`` for a
+        duplicate (still folded — provably a no-op)."""
+        if worker in self.monitor.last_seen:
+            self.monitor.beat(worker)
+        self.campaign.merge_reduction(reduction, tile)
+        self.stats["deliveries"] += 1
+        newly_done = self.board.complete(tile)
+        if newly_done:
+            self.campaign.tile_stats.append(TileStat(
+                tile=tile,
+                candidates=(reduction.hi - reduction.lo)
+                * len(self.campaign.workloads),
+                wall_s=busy_s))
+            self.campaign.next_tile = self.board.contiguous_done_prefix()
+        else:
+            self.stats["duplicates"] += 1
+        return newly_done
+
+    def worker_lost(self, worker: WorkerId) -> List[int]:
+        """Declare ``worker`` dead: its leases re-pend for re-issue and it
+        leaves heartbeat monitoring.  Late deliveries from it still fold."""
+        tiles = self.board.revoke_worker(worker)
+        self.monitor.forget(worker)
+        self.stats["reissued_tiles"] += len(tiles)
+        self.stats["lost_workers"].append(worker)
+        return tiles
+
+    def expire(self) -> Dict[WorkerId, List[int]]:
+        """Lease-timeout sweep: every worker that has been silent for longer
+        than ``timeout_s`` on the injected clock WHILE holding a lease is
+        declared lost.  Idle workers owe the coordinator nothing, so silence
+        alone never expels them (process death is the transport's job to
+        detect)."""
+        leased = {lease.worker for lease in self.board.leases.values()}
+        return {w: self.worker_lost(w)
+                for w in self.monitor.dead_hosts() if w in leased}
+
+    # -- state --------------------------------------------------------------
+
+    @property
+    def all_done(self) -> bool:
+        """True once the lease board has every tile completed."""
+        return self.board.all_done
+
+    def state_dict(self) -> Dict:
+        """Campaign schema version 1 plus a ``"fabric"`` key (done-tile
+        intervals + outstanding leases); ``next_tile`` is the contiguous done
+        prefix, so plain ``Campaign.from_checkpoint`` also resumes this."""
+        state = self.campaign.state_dict()
+        state["fabric"] = {
+            "done": _tile_intervals(self.board.done_tiles),
+            "leases": [[l.tile, l.worker] for l in
+                       sorted(self.board.leases.values(),
+                              key=lambda l: l.tile)],
+        }
+        return state
+
+    def checkpoint(self, path: str) -> str:
+        """Atomically persist ``state_dict`` to ``path``."""
+        return store.save_checkpoint(self.state_dict(), path)
+
+    def result(self, wall_s: float) -> CampaignResult:
+        """Materialize the campaign result with the board's (possibly
+        non-contiguous) completed-tile count."""
+        return self.campaign._result(wall_s, tiles_done=self.board.n_done)
+
+
+# ---------------------------------------------------------------------------
+# fault injection (tests + benchmark gates)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FaultInjection:
+    """Scripted failures for identity testing.
+
+    ``kill_worker`` crashes that worker mid-tile after it has completed
+    ``kill_after_tiles`` tiles (evaluation started, reduction never ships);
+    ``duplicate`` redelivers the first completed payload a second time;
+    ``hang_worker`` (``LocalFabric`` + ``FakeClock`` only) takes its lease
+    and never finishes, so only lease-timeout expiry can recover the tile.
+    """
+
+    kill_worker: Optional[int] = None
+    kill_after_tiles: int = 1
+    duplicate: bool = False
+    hang_worker: Optional[int] = None
+
+
+# ---------------------------------------------------------------------------
+# in-process deterministic fabric (the identity-test harness)
+# ---------------------------------------------------------------------------
+
+class LocalFabric:
+    """N simulated workers in one process, interleaved by a seeded RNG.
+
+    All workers share the campaign's own ``TileEvaluator`` (evaluation is a
+    pure function of config + span, so sharing changes nothing and avoids
+    re-jitting per worker); what varies across seeds is WHICH worker
+    completes next — i.e. the delivery order the coordinator observes.
+    Faults from ``FaultInjection`` are replayed exactly.  With a
+    ``FakeClock`` the virtual clock advances 1.0 per loop iteration, making
+    hang-expiry deterministic.
+
+    This is the harness behind the interleaving/fault identity tests: for
+    every seed and fault script, ``run().frontiers`` must be bitwise-equal
+    to the single-process ``Campaign.run`` frontiers.
+    """
+
+    def __init__(self, campaign_or_coord: Union[Campaign, FabricCoordinator],
+                 n_workers: int = 2, seed: int = 0,
+                 lease_timeout_s: float = 1e9, clock=None,
+                 fault: Optional[FaultInjection] = None):
+        if isinstance(campaign_or_coord, FabricCoordinator):
+            self.coord = campaign_or_coord
+        else:
+            self.coord = FabricCoordinator(
+                campaign_or_coord, lease_timeout_s=lease_timeout_s,
+                clock=clock if clock is not None else FakeClock())
+        if n_workers < 1:
+            raise ValueError("n_workers must be >= 1")
+        self.n_workers = int(n_workers)
+        self.seed = int(seed)
+        self.fault = fault or FaultInjection()
+        if (self.fault.hang_worker is not None
+                and not hasattr(self.coord.monitor.clock, "advance")):
+            raise ValueError("hang_worker injection needs a FakeClock — a "
+                             "real clock would spin until wall-clock expiry")
+
+    def run(self, max_completions: Optional[int] = None,
+            checkpoint_path: Optional[str] = None) -> CampaignResult:
+        """Drive the fabric to completion (or ``max_completions`` tile
+        completions, the distributed-interrupt point for resume tests)."""
+        coord, fault = self.coord, self.fault
+        campaign = coord.campaign
+        engine = campaign.engine
+        space = campaign.space
+        rng = np.random.default_rng(self.seed)
+        t_start = time.perf_counter()
+
+        alive = list(range(self.n_workers))
+        for w in alive:
+            coord.register_worker(w)
+        holding: Dict[int, int] = {}
+        completed = {w: 0 for w in alive}
+        kill_pending = fault.kill_worker is not None
+        duplicate_pending = fault.duplicate
+        n_completions = 0
+
+        def issue_leases():
+            for w in alive:
+                if w not in holding:
+                    tile = coord.lease(w)
+                    if tile is not None:
+                        holding[w] = tile
+
+        issue_leases()
+        while not coord.all_done:
+            if max_completions is not None and n_completions >= max_completions:
+                break
+            active = [w for w in holding if w != fault.hang_worker]
+            if active:
+                w = active[int(rng.integers(len(active)))]
+                tile = holding.pop(w)
+                if (kill_pending and w == fault.kill_worker
+                        and completed[w] >= fault.kill_after_tiles):
+                    # dies mid-tile: evaluation started, nothing delivered
+                    kill_pending = False
+                    alive.remove(w)
+                    coord.worker_lost(w)
+                else:
+                    lo, hi = tile_span(space, tile)
+                    t0 = time.perf_counter()
+                    batch = space.slice(lo, hi,
+                                        with_candidates=not engine.fused)
+                    tr = engine.reduce_tile(batch, lo)
+                    busy = time.perf_counter() - t0
+                    coord.deliver(w, tile, tr, busy_s=busy)
+                    if duplicate_pending:
+                        duplicate_pending = False
+                        coord.deliver(w, tile, tr, busy_s=0.0)
+                    completed[w] += 1
+                    n_completions += 1
+                    if checkpoint_path:
+                        coord.checkpoint(checkpoint_path)
+            if hasattr(coord.monitor.clock, "advance"):
+                coord.monitor.clock.advance(1.0)
+            for w in coord.expire():
+                if w in alive:
+                    alive.remove(w)
+                holding.pop(w, None)
+            issue_leases()
+            if not coord.all_done and not alive:
+                raise RuntimeError(
+                    f"fabric stalled: all workers lost with "
+                    f"{coord.board.n_pending} tiles pending")
+        if checkpoint_path:
+            coord.checkpoint(checkpoint_path)
+        return coord.result(time.perf_counter() - t_start)
+
+
+# ---------------------------------------------------------------------------
+# multiprocess fabric (real workers, spawn)
+# ---------------------------------------------------------------------------
+
+def _worker_main(worker_id: int, cfg: Dict, worker_cfg: Dict,
+                 task_q, result_q) -> None:
+    """Fabric worker loop (runs in a ``spawn`` child).
+
+    Protocol (all messages are 5-tuples ``(kind, wid, tile, payload,
+    busy_s)``): emits ``("ready", ...)`` once warm, then for each leased
+    tile received on ``task_q`` evaluates it with the shared
+    ``TileEvaluator`` and emits ``("result", wid, tile, TileReduction,
+    busy_s)``; ``None`` on ``task_q`` is shutdown.  ``busy_s`` is
+    ``time.process_time`` (CPU actually burned on the tile), the
+    machine-independent cost the scaling benchmark aggregates.  Fused
+    evaluators warm up (trace + compile) on tile 0's shape before
+    signalling ready, so per-tile busy excludes one-time compile cost.
+    """
+    try:
+        evaluator = evaluator_from_config(cfg)
+        space = evaluator.space
+        if evaluator.fused:
+            lo, hi = tile_span(space, 0)
+            evaluator.reduce_tile(space.slice(lo, hi, with_candidates=False),
+                                  lo)
+        result_q.put(("ready", worker_id, None, None, 0.0))
+        die_on_nth = (worker_cfg or {}).get("die_on_nth_tile")
+        n_received = 0
+        while True:
+            tile = task_q.get()
+            if tile is None:
+                return
+            n_received += 1
+            t0 = time.process_time()
+            lo, hi = tile_span(space, tile)
+            batch = space.slice(lo, hi, with_candidates=not evaluator.fused)
+            if die_on_nth is not None and n_received >= die_on_nth:
+                os._exit(40)  # injected crash mid-tile: result never ships
+            reduction = evaluator.reduce_tile(batch, lo)
+            result_q.put(("result", worker_id, tile, reduction,
+                          time.process_time() - t0))
+    except BaseException as exc:  # surface config/eval errors, then die
+        result_q.put(("error", worker_id, None, repr(exc), 0.0))
+        os._exit(1)
+
+
+class MultiprocessFabric:
+    """Coordinator + N real ``spawn`` worker processes on one machine.
+
+    The coordinator thread never evaluates: it leases tiles, folds
+    delivered ``TileReduction`` payloads, detects death two ways — process
+    exit (``Process.is_alive``, immediate) and lease timeout
+    (``HeartbeatMonitor``, catches hangs) — and re-issues revoked tiles to
+    surviving workers.  ``run`` returns the standard ``CampaignResult``;
+    ``self.stats`` additionally carries the per-worker busy-CPU ledger
+    (``worker_busy_s``) and the measurement window (``window_s``, from
+    all-workers-ready to last fold — imports and jit warm-up excluded) that
+    ``benchmarks/dse_campaign.py`` turns into scaling rows.
+    """
+
+    def __init__(self, campaign: Campaign, n_workers: int = 2,
+                 lease_timeout_s: float = 300.0,
+                 fault: Optional[FaultInjection] = None,
+                 checkpoint_every: int = 8):
+        if n_workers < 1:
+            raise ValueError("n_workers must be >= 1")
+        self.campaign = campaign
+        self.n_workers = int(n_workers)
+        self.lease_timeout_s = float(lease_timeout_s)
+        self.fault = fault or FaultInjection()
+        if self.fault.hang_worker is not None:
+            raise ValueError("hang_worker is a LocalFabric-only injection; "
+                             "multiprocess hangs are recovered by the lease "
+                             "timeout in real time")
+        self.checkpoint_every = max(int(checkpoint_every), 1)
+        self.stats: Dict = {}
+
+    def run(self, checkpoint_path: Optional[str] = None) -> CampaignResult:
+        """Run the campaign to completion across the worker fleet.
+
+        Leases are issued only after every worker is ready (or declared
+        lost), so tile distribution is fair regardless of per-worker warm-up
+        time.  Worker death is detected via ``Process.is_alive`` and lease
+        timeout; lost workers' tiles re-issue to survivors.  Raises if the
+        whole fleet dies.  The returned frontier is bitwise-identical to the
+        single-process run.
+        """
+        cfg = campaign_config(self.campaign)
+        coord = FabricCoordinator(self.campaign,
+                                  lease_timeout_s=self.lease_timeout_s)
+        ctx = mp.get_context("spawn")  # jax is not fork-safe
+        result_q = ctx.Queue()
+        procs: Dict[int, mp.Process] = {}
+        task_qs: Dict[int, object] = {}
+        for w in range(self.n_workers):
+            worker_cfg = {}
+            if self.fault.kill_worker == w:
+                worker_cfg["die_on_nth_tile"] = self.fault.kill_after_tiles + 1
+            task_qs[w] = ctx.Queue()
+            p = ctx.Process(target=_worker_main,
+                            args=(w, cfg, worker_cfg, task_qs[w], result_q),
+                            daemon=True)
+            p.start()
+            procs[w] = p
+
+        busy_s = {w: 0.0 for w in procs}
+        idle: List[int] = []
+        ready: set = set()
+        lost: set = set()
+        duplicate_pending = self.fault.duplicate
+        window_t0: Optional[float] = None
+
+        def issue_leases():
+            # hold the first lease until every worker is warm (or lost):
+            # issuing early would let the first-ready worker drain the board
+            # before its peers even finish compiling, skewing both the
+            # work split and the measurement window
+            if len(ready | lost) < self.n_workers:
+                return
+            while idle:
+                w = idle[0]
+                tile = coord.lease(w)
+                if tile is None:
+                    return
+                idle.pop(0)
+                task_qs[w].put(tile)
+
+        def mark_lost(w: int):
+            nonlocal window_t0
+            lost.add(w)
+            if w in idle:
+                idle.remove(w)
+            coord.worker_lost(w)
+            if window_t0 is None and len(ready | lost) == self.n_workers:
+                window_t0 = time.perf_counter()  # peer died during warm-up
+
+        try:
+            while not coord.all_done:
+                try:
+                    kind, w, tile, payload, t = result_q.get(timeout=0.05)
+                except queue_mod.Empty:
+                    kind = None
+                if kind == "ready":
+                    coord.register_worker(w)
+                    idle.append(w)
+                    ready.add(w)
+                    if len(ready | lost) == self.n_workers:
+                        window_t0 = time.perf_counter()
+                elif kind == "result":
+                    busy_s[w] += t
+                    newly = coord.deliver(w, tile, payload, busy_s=t)
+                    if duplicate_pending and newly:
+                        duplicate_pending = False
+                        coord.deliver(w, tile, payload, busy_s=0.0)
+                    if w not in lost:
+                        idle.append(w)
+                    if (checkpoint_path and newly and
+                            coord.board.n_done % self.checkpoint_every == 0):
+                        coord.checkpoint(checkpoint_path)
+                elif kind == "error":
+                    raise RuntimeError(f"fabric worker {w} failed: {payload}")
+                for w2, p in procs.items():
+                    if w2 not in lost and not p.is_alive():
+                        mark_lost(w2)
+                for w2 in coord.expire():
+                    if w2 not in lost:
+                        mark_lost(w2)
+                issue_leases()
+                if not coord.all_done and len(lost) == len(procs):
+                    raise RuntimeError(
+                        f"fabric stalled: all {len(procs)} workers lost with "
+                        f"{coord.board.n_pending} tiles pending")
+        finally:
+            for w, p in procs.items():
+                if p.is_alive():
+                    try:
+                        task_qs[w].put(None)
+                    except Exception:
+                        pass
+            for p in procs.values():
+                p.join(timeout=5)
+                if p.is_alive():
+                    p.terminate()
+        window_s = (time.perf_counter() - window_t0
+                    if window_t0 is not None else 0.0)
+        if checkpoint_path:
+            coord.checkpoint(checkpoint_path)
+        self.stats = {
+            **coord.stats,
+            "n_workers": self.n_workers,
+            "worker_busy_s": busy_s,
+            "max_worker_busy_s": max(busy_s.values()) if busy_s else 0.0,
+            "total_busy_s": sum(busy_s.values()),
+            "window_s": window_s,
+        }
+        return coord.result(window_s)
+
+
+def run_distributed(campaign: Campaign, n_workers: int = 2,
+                    lease_timeout_s: float = 300.0,
+                    checkpoint_path: Optional[str] = None,
+                    fault: Optional[FaultInjection] = None
+                    ) -> Tuple[CampaignResult, Dict]:
+    """One-call distributed sweep: run ``campaign`` on ``n_workers`` spawn
+    processes; returns ``(CampaignResult, fabric stats)``.  The result's
+    frontiers are bitwise-identical to ``campaign.run()`` single-process.
+    """
+    fabric = MultiprocessFabric(campaign, n_workers=n_workers,
+                                lease_timeout_s=lease_timeout_s, fault=fault)
+    result = fabric.run(checkpoint_path=checkpoint_path)
+    return result, fabric.stats

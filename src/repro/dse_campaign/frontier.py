@@ -286,6 +286,8 @@ class StreamingFrontier:
     # -- persistence --------------------------------------------------------
 
     def state_dict(self) -> Dict:
+        """JSON-serializable full state (skyline, aggregates, claimed spans,
+        trajectory); ``from_state`` inverts it exactly."""
         return {
             "candidates": [candidate_to_dict(c) for c in self.candidates],
             "energy_j": self.energy_j.tolist(),
@@ -301,6 +303,8 @@ class StreamingFrontier:
 
     @classmethod
     def from_state(cls, state: Dict) -> "StreamingFrontier":
+        """Rebuild a frontier from ``state_dict`` output; subsequent merges
+        continue exactly as if the frontier had never been serialized."""
         fr = cls(ref_energy_j=state["ref_energy_j"],
                  ref_latency_s=state["ref_latency_s"])
         fr.candidates = [candidate_from_dict(d) for d in state["candidates"]]
@@ -334,10 +338,13 @@ def frontiers_identical(a: dse.ParetoFrontier, b: dse.ParetoFrontier) -> bool:
 
 
 def candidate_to_dict(c: dse.Candidate) -> Dict:
+    """JSON-serializable form of a ``dse.Candidate`` (checkpoints, BENCH
+    artifacts); ``candidate_from_dict`` inverts it."""
     return {"chip": c.chip, "n_chips": int(c.n_chips),
             "mesh": list(c.mesh), "freq_mhz": float(c.freq_mhz)}
 
 
 def candidate_from_dict(d: Dict) -> dse.Candidate:
+    """Inverse of ``candidate_to_dict``."""
     return dse.Candidate(d["chip"], d["n_chips"], tuple(d["mesh"]),
                          d["freq_mhz"])

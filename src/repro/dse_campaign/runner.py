@@ -21,6 +21,13 @@ a ``SpaceSpec``, tile by tile.  Two tile engines exist:
   next tile's arrays while the device evaluates the current one
   (double-buffering), so candidate generation overlaps execution.
 
+The tile engine itself lives in ``TileEvaluator``, and a reduced tile is a
+``TileReduction`` — a pure function of (campaign config, tile span) that is
+cheap to serialize.  That split is what the distributed fabric
+(``repro.dse_campaign.fabric``) exploits: remote workers run the same
+``TileEvaluator`` and ship ``TileReduction`` payloads to one coordinator,
+whose frontier is bitwise-identical to this module's single-process sweep.
+
 Peak candidate memory is one tile regardless of space size.  Tiles carry
 their mesh axes (pod/data/model) into the simulators, so the factorization
 axis of the space differentiates the frontier on every evaluator.
@@ -35,6 +42,7 @@ reduced merge reproduces the raw merge's accounting exactly.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import queue
 import threading
 import time
@@ -53,9 +61,32 @@ WorkloadKey = Tuple[str, str]
 EVALUATORS = ("numpy", "jit", "fast", "pallas")
 
 
+def workload_to_dict(wl: dse.Workload) -> Dict:
+    """The JSON/pickle shape of a ``Workload`` used by checkpoints and the
+    fabric's worker config — one definition so the two cannot drift."""
+    return {"arch": wl.arch, "shape": wl.shape,
+            "base_analysis": dict(wl.base_analysis),
+            "base_chips": wl.base_chips,
+            "state_gb_per_device": wl.state_gb_per_device}
+
+
+def workload_from_dict(d: Dict) -> dse.Workload:
+    """Inverse of ``workload_to_dict``."""
+    return dse.Workload(arch=d["arch"], shape=d["shape"],
+                        base_analysis=d["base_analysis"],
+                        base_chips=d["base_chips"],
+                        state_gb_per_device=d["state_gb_per_device"])
+
+
 @dataclasses.dataclass
 class TileStat:
-    """Wall-clock accounting for one evaluated tile (all workloads)."""
+    """Wall-clock accounting for one evaluated tile (all workloads).
+
+    ``candidates`` counts per-workload candidate evaluations
+    (``len(tile) * n_workloads``); ``wall_s`` is the tile's evaluation wall
+    on whichever process evaluated it.  Stats survive checkpoint/resume, so
+    summing them stays consistent with the campaign's evaluated counters.
+    """
 
     tile: int
     candidates: int
@@ -67,7 +98,13 @@ class TileStat:
 
 @dataclasses.dataclass
 class CampaignResult:
-    """Final (or interrupted) campaign state returned by ``Campaign.run``."""
+    """Final (or interrupted) campaign state returned by ``Campaign.run``
+    and by the distributed fabric runners.
+
+    ``frontiers`` / ``trajectories`` are per-(arch, shape) workload;
+    ``tiles_done`` counts completed tiles (on a distributed run these may
+    have completed out of order — completion, not order, is the invariant).
+    """
 
     frontiers: Dict[WorkloadKey, dse.ParetoFrontier]
     trajectories: Dict[WorkloadKey, List]
@@ -79,10 +116,13 @@ class CampaignResult:
 
     @property
     def complete(self) -> bool:
+        """True once every tile of the space has folded into the frontiers."""
         return self.tiles_done >= self.n_tiles
 
     @property
     def candidates_evaluated(self) -> int:
+        """Per-workload candidate evaluations across all runs (tile_stats
+        survives resume), including any re-issued tiles on a fabric run."""
         return sum(s.candidates for s in self.tile_stats)
 
     @property
@@ -97,6 +137,50 @@ class CampaignResult:
     def candidates_per_sec(self) -> float:
         """Per-workload candidate evaluations per second of sweep wall."""
         return self.candidates_evaluated / max(self.sweep_wall_s, 1e-9)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileReduction:
+    """One evaluated tile reduced to exactly what a frontier merge needs.
+
+    Per workload ``w``: ``surv_gidx[w]`` (global candidate indices into the
+    space), ``surv_energy[w]`` / ``surv_latency[w]`` (float64 scores), the
+    tile's exact feasible count ``n_feasible[w]``, and the tile's feasible
+    maxima ``ref_energy_j[w]`` / ``ref_latency_s[w]`` (``None`` when the
+    tile has no feasible point).
+
+    Invariants the fabric and the fused single-process path both rely on:
+
+    * ``surv_gidx[w] ⊆ [lo, hi)`` and holds a FEASIBLE SUPERSET of the
+      tile's per-workload Pareto skyline, so
+      ``StreamingFrontier.merge_reduced`` recovers the exact skyline and
+      reproduces the raw merge's accounting bitwise;
+    * the payload is O(survivors), not O(tile) — cheap to pickle across a
+      process (or host) boundary;
+    * it is a pure function of (space, workloads, constraint, sim,
+      evaluator) and the tile span — no cross-tile state — which is what
+      makes a lost tile safely re-issuable to any other worker.
+    """
+
+    lo: int
+    hi: int
+    surv_gidx: Tuple[np.ndarray, ...]
+    surv_energy: Tuple[np.ndarray, ...]
+    surv_latency: Tuple[np.ndarray, ...]
+    n_feasible: Tuple[int, ...]
+    ref_energy_j: Tuple[Optional[float], ...]
+    ref_latency_s: Tuple[Optional[float], ...]
+
+    @property
+    def n_workloads(self) -> int:
+        """Workload count W (every per-workload tuple has this length)."""
+        return len(self.surv_gidx)
+
+    @property
+    def n_survivors(self) -> int:
+        """Total survivors across workloads — the payload's wire size is
+        O(this), never O(tile)."""
+        return int(sum(g.size for g in self.surv_gidx))
 
 
 class _TilePrefetcher:
@@ -149,22 +233,24 @@ class _TilePrefetcher:
         self._stop.set()
 
 
-class Campaign:
-    """Streaming multi-workload DSE campaign over a ``SpaceSpec``.
+class TileEvaluator:
+    """The one-tile engine shared by ``Campaign`` and the fabric workers.
 
-    ``evaluator`` selects the tile engine: ``"numpy"`` (float64 simulator,
-    bitwise-identical to one-shot ``pareto_search``), ``"jit"``
-    (float32 fused multi-workload sweep, ``costmodel.sweep_workloads_
-    reduced_jit``), ``"pallas"`` (the fused Pallas DSE-sweep kernel —
-    float64 in interpret mode on CPU, where its frontier holds the numpy
-    evaluator's exact candidate set, float32 compiled on an accelerator),
-    or ``"fast"``
-    (trained predictors; pass fitted ``power_model``/``cycles_model``).
+    Holds everything needed to turn a tile span of a ``SpaceSpec`` into a
+    ``TileReduction``: the workload set, constraint, ``SimConfig`` and the
+    evaluator tier.  ``reduce_tile`` is side-effect free with respect to
+    the campaign (no frontier state lives here), so any number of
+    evaluators — across threads, processes or hosts — can work on disjoint
+    (or even overlapping) tiles and their reductions fold into one frontier
+    without coordination beyond the merge itself.
 
-    ``pipeline=False`` disables the fused path for ``"jit"`` and falls back
-    to the original per-workload loop on unpadded tiles (one launch per
-    workload per tile, full-tile host transfer, raw merges) — kept as the
-    measured baseline for the evaluator-speedup benchmark.
+    ``evaluator`` selects the engine: ``"numpy"`` (float64 per-workload
+    simulator, bitwise-identical to one-shot ``pareto_search``), ``"jit"``
+    (fused float32 multi-workload sweep; ``pipeline=False`` falls back to
+    the legacy per-workload jit loop), ``"pallas"`` (the fused Pallas
+    DSE-sweep kernel), or ``"fast"`` (trained predictors; requires fitted
+    ``power_model``/``cycles_model`` and — being unpicklable — is refused
+    by the distributed fabric).
     """
 
     def __init__(self, workloads: Sequence[dse.Workload], space: SpaceSpec,
@@ -172,7 +258,6 @@ class Campaign:
                  evaluator: str = "numpy",
                  sim: costmodel.SimConfig = costmodel.SimConfig(),
                  power_model=None, cycles_model=None,
-                 checkpoint_every: int = 1,
                  pipeline: bool = True,
                  max_survivors: int = 2048):
         if evaluator not in EVALUATORS:
@@ -191,13 +276,255 @@ class Campaign:
         self.sim = sim
         self.power_model = power_model
         self.cycles_model = cycles_model
-        self.checkpoint_every = max(int(checkpoint_every), 1)
         self.pipeline = bool(pipeline)
         self.max_survivors = max(int(max_survivors), 1)
+
+    @property
+    def fused(self) -> bool:
+        """Whether tiles go through the fused multi-workload reduced path."""
+        return (self.evaluator == "pallas"
+                or (self.evaluator == "jit" and self.pipeline))
+
+    @property
+    def workload_keys(self) -> List[WorkloadKey]:
+        """(arch, shape) keys in workload order — the order every
+        ``TileReduction`` tuple and frontier dict is indexed by."""
+        return [(wl.arch, wl.shape) for wl in self.workloads]
+
+    # -- per-workload evaluation (numpy / fast / legacy jit) ----------------
+
+    def evaluate_workload(self, wl: dse.Workload, batch: dse.CandidateBatch
+                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(energy_j, latency_s, feasible) for one workload on one tile."""
+        if self.evaluator == "fast":
+            return self._evaluate_fast(wl, batch)
+        res, feasible = dse.evaluate_workload_tile(
+            wl, batch, self.constraint, sim=self.sim, engine=self.evaluator)
+        return np.asarray(res.energy_j), np.asarray(res.latency_s), feasible
+
+    def _evaluate_fast(self, wl: dse.Workload, batch: dse.CandidateBatch):
+        """Predictor fast path via ``dse.predict_space`` (same scoring as
+        ``fast_path_search``).  Workload shapes suffixed with a pod tag
+        resolve to their base shape."""
+        cfg = get_config(wl.arch)
+        shape = SHAPES[wl.shape.split(":", 1)[0]]
+        energy, latency, feasible, _, _ = dse.predict_space(
+            cfg, shape, self.power_model, self.cycles_model, batch,
+            self.constraint)
+        return energy, latency, feasible
+
+    # -- fused zero-copy sweep (jit / pallas) -------------------------------
+
+    @functools.cached_property
+    def wl_cols(self) -> np.ndarray:
+        """Packed [W, len(WL_COLS)] per-workload scalar matrix (cached)."""
+        return np.asarray(
+            [[wl.base_analysis["flops"], wl.base_analysis["hbm_bytes"],
+              wl.base_analysis["collective_bytes"],
+              wl.base_analysis["wire_bytes"], wl.base_chips,
+              wl.state_gb_per_device] for wl in self.workloads],
+            np.float64)
+
+    def padded_tile_arrays(self, batch: dse.CandidateBatch) -> Dict:
+        """The tile's packed columns padded to ``chunk_size`` with a validity
+        mask — every tile presents the SAME shapes to the device function,
+        so jit/Pallas trace exactly once for the whole sweep (the partial
+        final tile no longer retriggers a retrace)."""
+        n = len(batch)
+        target = max(self.space.chunk_size, n)
+        pad = target - n
+
+        def padarr(a):
+            a = np.asarray(a)
+            return a if pad == 0 else np.concatenate(
+                [a, np.repeat(a[:1], pad, axis=0)])
+
+        valid = np.ones(target, np.float64)
+        valid[n:] = 0.0
+        arrays = {
+            "n_chips": padarr(batch.n_chips),
+            "freq_mhz": padarr(batch.freq_mhz),
+            "mesh_pod": padarr(batch.pod_axis()),
+            "mesh_data": padarr(batch.mesh_data),
+            "mesh_model": padarr(batch.mesh_model),
+            "valid": valid,
+        }
+        arrays.update({k: padarr(batch.chip_cols[k])
+                       for k in costmodel.SWEEP_GATHER_FIELDS})
+        return arrays
+
+    def sweep_reduced(self, batch: dse.CandidateBatch
+                      ) -> costmodel.SweepReduced:
+        """ONE fused launch: all workloads x one padded tile, skyline-reduced
+        on device."""
+        arrays = self.padded_tile_arrays(batch)
+        cons = self.constraint
+        if self.evaluator == "pallas":
+            from repro.kernels import ops
+            from repro.kernels.dse_sweep import pack_cand_cols
+            return ops.dse_sweep(
+                pack_cand_cols(arrays), self.wl_cols, sim=self.sim,
+                constraint=cons, max_survivors=self.max_survivors,
+                n_valid=len(batch))
+        return costmodel.sweep_workloads_reduced_jit(
+            self.wl_cols,
+            {k: arrays[k] for k in costmodel.SWEEP_GATHER_FIELDS},
+            arrays["n_chips"], arrays["freq_mhz"], arrays["mesh_pod"],
+            arrays["mesh_data"], arrays["mesh_model"], arrays["valid"],
+            sim=self.sim, max_power_w=cons.max_power_w,
+            max_latency_s=cons.max_latency_s, min_hbm_fit=cons.min_hbm_fit,
+            max_survivors=self.max_survivors)
+
+    # -- the normalized reduction -------------------------------------------
+
+    @staticmethod
+    def _reduce_rows(energy: np.ndarray, latency: np.ndarray,
+                     feasible: np.ndarray, lo: int):
+        """Host-side reduction of one workload's raw tile rows: exact
+        feasible Pareto survivors + the aggregates ``merge_reduced`` needs to
+        reproduce the raw merge's accounting (proven identical by the
+        ``merge_reduced``-vs-raw hypothesis property)."""
+        e = np.asarray(energy, np.float64)
+        l = np.asarray(latency, np.float64)
+        feas = np.asarray(feasible, bool)
+        loc = np.flatnonzero(dse.pareto_mask(e, l, feas))
+        n_feas = int(feas.sum())
+        ref_e = float(e[feas].max()) if n_feas else None
+        ref_l = float(l[feas].max()) if n_feas else None
+        return (lo + loc.astype(np.int64), e[loc], l[loc], n_feas,
+                ref_e, ref_l)
+
+    def reduce_tile(self, batch: dse.CandidateBatch, lo: int
+                    ) -> TileReduction:
+        """Evaluate one tile for ALL workloads and reduce it to a
+        ``TileReduction`` — the single entry point both the in-process fused
+        sweep and the fabric workers call, so the two paths cannot diverge.
+
+        Fused evaluators keep the on-device screen survivors (a feasible
+        superset of the tile skyline, float-cast to float64 exactly); a
+        workload whose screened set overflowed ``max_survivors`` — and every
+        non-fused evaluator — is reduced host-side to the exact feasible
+        Pareto set instead.  Either way the fold through
+        ``StreamingFrontier.merge_reduced`` equals the raw full-tile merge.
+        """
+        n = len(batch)
+        cols = {"gidx": [], "e": [], "l": [], "nf": [], "re": [], "rl": []}
+
+        def add(gidx, e, l, nf, re, rl):
+            cols["gidx"].append(gidx)
+            cols["e"].append(e)
+            cols["l"].append(l)
+            cols["nf"].append(nf)
+            cols["re"].append(re)
+            cols["rl"].append(rl)
+
+        if self.fused:
+            red = self.sweep_reduced(batch)
+            for wi in range(len(self.workloads)):
+                if red.overflowed(wi):
+                    add(*self._reduce_rows(
+                        np.asarray(red.energy_full)[wi][:n],
+                        np.asarray(red.latency_full)[wi][:n],
+                        np.asarray(red.feasible_full)[wi][:n], lo))
+                    continue
+                k = int(red.n_survivors[wi])
+                nf = int(red.n_feasible[wi])
+                add(lo + red.surv_idx[wi][:k].astype(np.int64),
+                    red.surv_energy[wi][:k].astype(np.float64),
+                    red.surv_latency[wi][:k].astype(np.float64), nf,
+                    float(red.ref_energy[wi]) if nf else None,
+                    float(red.ref_latency[wi]) if nf else None)
+        else:
+            for wl in self.workloads:
+                energy, latency, feasible = self.evaluate_workload(wl, batch)
+                add(*self._reduce_rows(energy, latency, feasible, lo))
+        return TileReduction(
+            lo=lo, hi=lo + n,
+            surv_gidx=tuple(cols["gidx"]), surv_energy=tuple(cols["e"]),
+            surv_latency=tuple(cols["l"]), n_feasible=tuple(cols["nf"]),
+            ref_energy_j=tuple(cols["re"]), ref_latency_s=tuple(cols["rl"]))
+
+
+class Campaign:
+    """Streaming multi-workload DSE campaign over a ``SpaceSpec``.
+
+    ``evaluator`` selects the tile engine: ``"numpy"`` (float64 simulator,
+    bitwise-identical to one-shot ``pareto_search``), ``"jit"``
+    (float32 fused multi-workload sweep, ``costmodel.sweep_workloads_
+    reduced_jit``), ``"pallas"`` (the fused Pallas DSE-sweep kernel —
+    float64 in interpret mode on CPU, where its frontier holds the numpy
+    evaluator's exact candidate set, float32 compiled on an accelerator),
+    or ``"fast"``
+    (trained predictors; pass fitted ``power_model``/``cycles_model``).
+
+    ``pipeline=False`` disables the fused path for ``"jit"`` and falls back
+    to the original per-workload loop on unpadded tiles (one launch per
+    workload per tile, full-tile host transfer, raw merges) — kept as the
+    measured baseline for the evaluator-speedup benchmark.
+
+    Invariant: the final frontier depends only on (space, workloads,
+    constraint, sim, evaluator) — never on tile size, tile order,
+    interruption points, or (via ``repro.dse_campaign.fabric``) how many
+    workers evaluated the tiles.
+    """
+
+    def __init__(self, workloads: Sequence[dse.Workload], space: SpaceSpec,
+                 constraint: dse.Constraint = None,
+                 evaluator: str = "numpy",
+                 sim: costmodel.SimConfig = costmodel.SimConfig(),
+                 power_model=None, cycles_model=None,
+                 checkpoint_every: int = 1,
+                 pipeline: bool = True,
+                 max_survivors: int = 2048):
+        self.engine = TileEvaluator(
+            workloads, space, constraint=constraint, evaluator=evaluator,
+            sim=sim, power_model=power_model, cycles_model=cycles_model,
+            pipeline=pipeline, max_survivors=max_survivors)
+        self.checkpoint_every = max(int(checkpoint_every), 1)
         self.frontiers: Dict[WorkloadKey, StreamingFrontier] = {
-            k: StreamingFrontier() for k in keys}
+            k: StreamingFrontier() for k in self.engine.workload_keys}
         self.tile_stats: List[TileStat] = []
         self.next_tile = 0
+
+    # -- config views (the engine owns the config; Campaign owns the state) -
+
+    @property
+    def workloads(self) -> List[dse.Workload]:
+        return self.engine.workloads
+
+    @property
+    def space(self) -> SpaceSpec:
+        return self.engine.space
+
+    @property
+    def constraint(self) -> dse.Constraint:
+        return self.engine.constraint
+
+    @property
+    def evaluator(self) -> str:
+        return self.engine.evaluator
+
+    @property
+    def sim(self) -> costmodel.SimConfig:
+        return self.engine.sim
+
+    @property
+    def pipeline(self) -> bool:
+        return self.engine.pipeline
+
+    @property
+    def max_survivors(self) -> int:
+        return self.engine.max_survivors
+
+    @property
+    def fused(self) -> bool:
+        """Whether tiles go through the fused multi-workload reduced path."""
+        return self.engine.fused
+
+    def _sweep_tile_reduced(self, batch: dse.CandidateBatch
+                            ) -> costmodel.SweepReduced:
+        """One fused launch on one tile (kernel-test entry point)."""
+        return self.engine.sweep_reduced(batch)
 
     # -- construction -------------------------------------------------------
 
@@ -242,6 +569,12 @@ class Campaign:
         ``costmodel.SIM_MODEL_VERSION`` is refused for the same reason: its
         folded-in tiles and the tiles a resume would evaluate come from
         incomparable cost models.
+
+        A checkpoint written by the distributed fabric also loads here:
+        ``next_tile`` is the contiguous done prefix, and any out-of-order
+        tiles the fabric already folded re-merge as exact no-ops (span
+        idempotence), so a single-process resume still converges to the
+        same frontier.
         """
         state = store.load_checkpoint(path)
         ckpt_model = state.get("sim_model_version")
@@ -252,11 +585,7 @@ class Campaign:
                 f"{costmodel.SIM_MODEL_VERSION}; resuming would splice two "
                 "incomparable cost models into one frontier — re-run the "
                 "campaign from scratch")
-        workloads = [dse.Workload(arch=w["arch"], shape=w["shape"],
-                                  base_analysis=w["base_analysis"],
-                                  base_chips=w["base_chips"],
-                                  state_gb_per_device=w["state_gb_per_device"])
-                     for w in state["workloads"]]
+        workloads = [workload_from_dict(w) for w in state["workloads"]]
         cons = dse.Constraint(**state["constraint"])
         kwargs.setdefault("sim", costmodel.SimConfig(**state["sim"]))
         # checkpoints written before the fused pipeline carry no key: they
@@ -273,128 +602,23 @@ class Campaign:
             camp.frontiers[(arch, shape)] = StreamingFrontier.from_state(fr_state)
         return camp
 
-    # -- per-workload evaluation (numpy / fast / legacy jit) ----------------
+    # -- folding ------------------------------------------------------------
 
-    def _evaluate_tile(self, wl: dse.Workload, batch: dse.CandidateBatch
-                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """(energy_j, latency_s, feasible) for one workload on one tile."""
-        if self.evaluator == "fast":
-            return self._evaluate_tile_fast(wl, batch)
-        res, feasible = dse.evaluate_workload_tile(
-            wl, batch, self.constraint, sim=self.sim, engine=self.evaluator)
-        return np.asarray(res.energy_j), np.asarray(res.latency_s), feasible
+    def merge_reduction(self, tr: TileReduction, tile_no: int = -1) -> None:
+        """Fold one ``TileReduction`` into every workload's frontier, with
+        survivor ``Candidate`` objects materialized lazily from the space.
 
-    def _evaluate_tile_fast(self, wl: dse.Workload, batch: dse.CandidateBatch):
-        """Predictor fast path via ``dse.predict_space`` (same scoring as
-        ``fast_path_search``).  Workload shapes suffixed with a pod tag
-        resolve to their base shape."""
-        cfg = get_config(wl.arch)
-        shape = SHAPES[wl.shape.split(":", 1)[0]]
-        energy, latency, feasible, _, _ = dse.predict_space(
-            cfg, shape, self.power_model, self.cycles_model, batch,
-            self.constraint)
-        return energy, latency, feasible
-
-    # -- fused zero-copy pipeline (jit / pallas) ----------------------------
-
-    @property
-    def fused(self) -> bool:
-        """Whether tiles go through the fused multi-workload reduced path."""
-        return (self.evaluator == "pallas"
-                or (self.evaluator == "jit" and self.pipeline))
-
-    @property
-    def _wl_cols(self) -> np.ndarray:
-        """Packed [W, len(WL_COLS)] per-workload scalar matrix (cached)."""
-        cols = getattr(self, "_wl_cols_cache", None)
-        if cols is None:
-            cols = np.asarray(
-                [[wl.base_analysis["flops"], wl.base_analysis["hbm_bytes"],
-                  wl.base_analysis["collective_bytes"],
-                  wl.base_analysis["wire_bytes"], wl.base_chips,
-                  wl.state_gb_per_device] for wl in self.workloads],
-                np.float64)
-            self._wl_cols_cache = cols
-        return cols
-
-    def _padded_tile_arrays(self, batch: dse.CandidateBatch) -> Dict:
-        """The tile's packed columns padded to ``chunk_size`` with a validity
-        mask — every tile presents the SAME shapes to the device function,
-        so jit/Pallas trace exactly once for the whole sweep (the partial
-        final tile no longer retriggers a retrace)."""
-        n = len(batch)
-        target = max(self.space.chunk_size, n)
-        pad = target - n
-
-        def padarr(a):
-            a = np.asarray(a)
-            return a if pad == 0 else np.concatenate(
-                [a, np.repeat(a[:1], pad, axis=0)])
-
-        valid = np.ones(target, np.float64)
-        valid[n:] = 0.0
-        arrays = {
-            "n_chips": padarr(batch.n_chips),
-            "freq_mhz": padarr(batch.freq_mhz),
-            "mesh_pod": padarr(batch.pod_axis()),
-            "mesh_data": padarr(batch.mesh_data),
-            "mesh_model": padarr(batch.mesh_model),
-            "valid": valid,
-        }
-        arrays.update({k: padarr(batch.chip_cols[k])
-                       for k in costmodel.SWEEP_GATHER_FIELDS})
-        return arrays
-
-    def _sweep_tile_reduced(self, batch: dse.CandidateBatch
-                            ) -> costmodel.SweepReduced:
-        """ONE fused launch: all workloads x one padded tile, skyline-reduced
-        on device."""
-        arrays = self._padded_tile_arrays(batch)
-        cons = self.constraint
-        if self.evaluator == "pallas":
-            from repro.kernels import ops
-            from repro.kernels.dse_sweep import pack_cand_cols
-            return ops.dse_sweep(
-                pack_cand_cols(arrays), self._wl_cols, sim=self.sim,
-                constraint=cons, max_survivors=self.max_survivors,
-                n_valid=len(batch))
-        return costmodel.sweep_workloads_reduced_jit(
-            self._wl_cols,
-            {k: arrays[k] for k in costmodel.SWEEP_GATHER_FIELDS},
-            arrays["n_chips"], arrays["freq_mhz"], arrays["mesh_pod"],
-            arrays["mesh_data"], arrays["mesh_model"], arrays["valid"],
-            sim=self.sim, max_power_w=cons.max_power_w,
-            max_latency_s=cons.max_latency_s, min_hbm_fit=cons.min_hbm_fit,
-            max_survivors=self.max_survivors)
-
-    def _merge_reduced_tile(self, red: costmodel.SweepReduced, lo: int,
-                            n: int, tile_no: int) -> None:
-        """Fold one fused launch into every workload's frontier — reduced
-        merges with lazily materialized survivor ``Candidate`` objects; the
-        (rare) skyline overflow falls back to a raw full-tile merge."""
-        fallback_cands = None
+        Idempotent at tile granularity: re-folding an already-folded tile —
+        a duplicate delivery on the fabric, or a replayed tile after a
+        resume — changes neither the frontier nor its accounting."""
         for wi, wl in enumerate(self.workloads):
-            fr = self.frontiers[(wl.arch, wl.shape)]
-            if red.overflowed(wi):
-                if fallback_cands is None:
-                    fallback_cands = self.space.slice(lo, lo + n).candidates
-                fr.merge(fallback_cands,
-                         np.asarray(red.energy_full)[wi][:n].astype(np.float64),
-                         np.asarray(red.latency_full)[wi][:n].astype(np.float64),
-                         np.asarray(red.feasible_full)[wi][:n],
-                         indices=np.arange(lo, lo + n, dtype=np.int64),
-                         tile=tile_no)
-                continue
-            k = int(red.n_survivors[wi])
-            local = red.surv_idx[wi][:k].astype(np.int64)
-            gidx = lo + local
-            cands = self.space.candidates_at(gidx)
-            fr.merge_reduced(
-                cands, red.surv_energy[wi][:k].astype(np.float64),
-                red.surv_latency[wi][:k].astype(np.float64), gidx,
-                span=(lo, lo + n), n_feasible=int(red.n_feasible[wi]),
-                ref_energy_j=float(red.ref_energy[wi]),
-                ref_latency_s=float(red.ref_latency[wi]), tile=tile_no)
+            gidx = tr.surv_gidx[wi]
+            self.frontiers[(wl.arch, wl.shape)].merge_reduced(
+                self.space.candidates_at(gidx), tr.surv_energy[wi],
+                tr.surv_latency[wi], gidx, span=(tr.lo, tr.hi),
+                n_feasible=tr.n_feasible[wi],
+                ref_energy_j=tr.ref_energy_j[wi],
+                ref_latency_s=tr.ref_latency_s[wi], tile=tile_no)
 
     # -- the sweep ----------------------------------------------------------
 
@@ -415,12 +639,13 @@ class Campaign:
                     break
                 t0 = time.perf_counter()
                 if fused:
-                    red = self._sweep_tile_reduced(batch)
-                    self._merge_reduced_tile(red, lo, len(batch), tile_no)
+                    self.merge_reduction(self.engine.reduce_tile(batch, lo),
+                                         tile_no)
                 else:
                     indices = np.arange(lo, lo + len(batch), dtype=np.int64)
                     for wl in self.workloads:
-                        energy, latency, feasible = self._evaluate_tile(wl, batch)
+                        energy, latency, feasible = \
+                            self.engine.evaluate_workload(wl, batch)
                         self.frontiers[(wl.arch, wl.shape)].merge(
                             batch.candidates, energy, latency, feasible,
                             indices=indices, tile=tile_no)
@@ -438,7 +663,8 @@ class Campaign:
             store.save_checkpoint(self.state_dict(), checkpoint_path)
         return self._result(time.perf_counter() - t_start)
 
-    def _result(self, wall_s: float) -> CampaignResult:
+    def _result(self, wall_s: float, tiles_done: Optional[int] = None
+                ) -> CampaignResult:
         wl_by_key = {(wl.arch, wl.shape): wl for wl in self.workloads}
         return CampaignResult(
             frontiers={k: fr.as_pareto_frontier(wl_by_key[k])
@@ -447,23 +673,21 @@ class Campaign:
                           for k, fr in self.frontiers.items()},
             tile_stats=list(self.tile_stats),
             space_size=len(self.space),
-            tiles_done=self.next_tile,
+            tiles_done=self.next_tile if tiles_done is None else tiles_done,
             n_tiles=self.space.n_tiles(),
             wall_s=wall_s)
 
     # -- persistence --------------------------------------------------------
 
     def state_dict(self) -> Dict:
+        """Full JSON-serializable campaign state (schema version 1), stamped
+        with ``SIM_MODEL_VERSION`` so ``from_checkpoint`` can refuse to splice
+        two cost models into one frontier."""
         return {
             "version": 1,
             "sim_model_version": costmodel.SIM_MODEL_VERSION,
             "space": self.space.to_dict(),
-            "workloads": [{
-                "arch": wl.arch, "shape": wl.shape,
-                "base_analysis": dict(wl.base_analysis),
-                "base_chips": wl.base_chips,
-                "state_gb_per_device": wl.state_gb_per_device,
-            } for wl in self.workloads],
+            "workloads": [workload_to_dict(wl) for wl in self.workloads],
             "constraint": dataclasses.asdict(self.constraint),
             "sim": dataclasses.asdict(self.sim),
             "evaluator": self.evaluator,

@@ -133,9 +133,13 @@ class SpaceSpec:
 
     @property
     def n_rows(self) -> int:
+        """Resident row count — the actual memory footprint of the spec
+        (``len(self)`` candidates are addressed, never materialized)."""
         return len(self._rows)
 
     def n_tiles(self, chunk_size: int = None) -> int:
+        """Number of ``chunk_size`` tiles covering the space (last may be
+        partial).  This is the fabric's unit of work."""
         c = chunk_size or self.chunk_size
         return -(-len(self) // c)
 
@@ -232,6 +236,8 @@ class SpaceSpec:
     # -- persistence --------------------------------------------------------
 
     def to_dict(self) -> Dict:
+        """Declarative JSON form of the spec (the *recipe*, never the rows);
+        carries ``size`` so ``from_dict`` can detect index-space drift."""
         return {
             "chips": list(self.chips),
             "chip_counts": list(self.chip_counts),
@@ -244,6 +250,8 @@ class SpaceSpec:
 
     @classmethod
     def from_dict(cls, d: Dict) -> "SpaceSpec":
+        """Rebuild a spec from ``to_dict`` output, refusing if the rebuilt
+        index space has a different size (global indices would be invalid)."""
         spec = cls(chips=tuple(d["chips"]),
                    chip_counts=tuple(d["chip_counts"]),
                    freq_points=d["freq_points"],

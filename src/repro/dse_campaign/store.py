@@ -4,6 +4,13 @@ Two artifact kinds:
   * checkpoint — the full resumable ``Campaign.state_dict()`` (spec,
     workloads, constraint, per-workload frontier state, next tile), written
     atomically so an interrupt mid-write never corrupts the resume point.
+    A distributed run (``repro.dse_campaign.fabric``) writes the SAME
+    schema (version 1) plus an optional ``"fabric"`` key holding done-tile
+    intervals and outstanding leases; ``next_tile`` is the contiguous done
+    prefix, so either resume path — ``FabricCoordinator.from_checkpoint``
+    (skips all done tiles) or plain ``Campaign.from_checkpoint`` (replays
+    out-of-prefix tiles as exact merge no-ops) — converges to the same
+    frontier.
   * campaign report — the ``BENCH_dse_campaign.json`` shape consumed by CI:
     frontier members + per-tile trajectory + throughput, diffable across PRs
     the same way the other ``BENCH_*``/bench ``run.json`` artifacts are.

@@ -24,11 +24,30 @@ from typing import Callable, Dict, List, Optional
 
 
 class HeartbeatMonitor:
+    """Per-host liveness registry with timeout-based failure detection.
+
+    A host is *dead* when strictly more than ``timeout_s`` has elapsed on
+    ``clock`` since its last ``beat`` (or since registration).  The clock is
+    injectable, so expiry is deterministic under a fake clock in tests — the
+    campaign fabric relies on this to test lease-timeout re-issue without
+    sleeping.  Membership is dynamic: ``register`` admits a host mid-flight
+    (workers joining a fabric) and ``forget`` retires one (confirmed-dead
+    workers must be dropped, or they would report dead forever).
+    """
+
     def __init__(self, hosts: List[str], timeout_s: float = 60.0,
                  clock: Callable[[], float] = time.monotonic):
         self.timeout_s = timeout_s
         self.clock = clock
         self.last_seen: Dict[str, float] = {h: clock() for h in hosts}
+
+    def register(self, host: str):
+        """Admit ``host``, marking it alive as of now (idempotent refresh)."""
+        self.last_seen[host] = self.clock()
+
+    def forget(self, host: str):
+        """Retire ``host`` from monitoring (no-op if unknown)."""
+        self.last_seen.pop(host, None)
 
     def beat(self, host: str):
         self.last_seen[host] = self.clock()

@@ -1,0 +1,83 @@
+"""Markdown link checker for the repo's docs.
+
+Walks README.md, ROADMAP.md, and docs/*.md, extracts inline markdown links
+(``[text](target)``), and verifies that every **local** target resolves to a
+real file or directory relative to the file containing the link.  Fragments
+(``#section``) are checked for existence of the file only; pure-fragment
+links and external URLs (``http(s)://``, ``mailto:``) are skipped, as are
+links inside fenced code blocks.  Targets that escape the repo root (the
+GitHub-relative ``../../actions/...`` badge URL) are skipped too — they are
+resolved by github.com, not the working tree.
+
+Exit status is non-zero (with one line per broken link) if anything dangles,
+so CI can gate on it:
+
+    python tools/check_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# Inline links only; reference-style links are not used in this repo.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"^(```|~~~)")
+
+SKIP_SCHEMES = ("http://", "https://", "mailto:")
+
+
+def iter_links(md_path: Path):
+    """Yield (lineno, target) for every inline link outside code fences."""
+    in_fence = False
+    for lineno, line in enumerate(md_path.read_text().splitlines(), start=1):
+        if _FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def check_file(md_path: Path) -> list[str]:
+    errors = []
+    for lineno, target in iter_links(md_path):
+        if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+            continue
+        path_part = target.split("#", 1)[0]
+        if not path_part:
+            continue
+        resolved = (md_path.parent / path_part).resolve()
+        if not resolved.is_relative_to(REPO):
+            continue
+        if not resolved.exists():
+            rel = md_path.relative_to(REPO)
+            errors.append(f"{rel}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    md_files = [REPO / "README.md", REPO / "ROADMAP.md"]
+    md_files += sorted((REPO / "docs").glob("*.md"))
+    md_files = [p for p in md_files if p.exists()]
+
+    all_errors: list[str] = []
+    n_links = 0
+    for md in md_files:
+        n_links += sum(1 for _ in iter_links(md))
+        all_errors.extend(check_file(md))
+
+    if all_errors:
+        print(f"{len(all_errors)} broken link(s):")
+        for err in all_errors:
+            print(f"  {err}")
+        return 1
+    print(f"OK: {n_links} links across {len(md_files)} files, none broken")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
