@@ -26,6 +26,7 @@ MODULES = [
     ("hxa", "benchmarks.hxa_accuracy"),           # HyPA table
     ("dse", "benchmarks.dse_speedup"),            # DSE motivation
     ("campaign", "benchmarks.dse_campaign"),      # streaming mega-space sweep
+    ("serving", "benchmarks.serving"),            # selection query layer
     ("offload", "benchmarks.offload_analysis"),   # paper §IV
     ("roofline", "benchmarks.roofline_table"),    # §Roofline generator
     ("kernels", "benchmarks.kernel_bench"),       # Pallas kernels

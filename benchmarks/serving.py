@@ -1,0 +1,215 @@
+"""Accelerator-selection serving benchmark — the query layer as a CI artifact.
+
+Runs an offline campaign over ALL cached dry-run workloads, builds the
+``FrontierIndex`` from it (through a real save/load round trip), and drives
+a ``SelectionEngine`` through the three answer paths:
+
+  * index-hit     — every cached cell queried ``HIT_REPEATS`` times; the
+                    answers-identity verdict (served frontier == offline
+                    campaign pick, exact candidate identity, every cell) and
+                    p50/p99 query latency;
+  * mini-campaign — novel census-perturbed workloads through the fused exact
+                    fallback; parity verdict vs a standalone campaign on the
+                    same config, p50/p99 latency, and the batched-window
+                    check: N concurrent novel queries must ride exactly ONE
+                    fused sweep launch (read from ``fused_launches`` —
+                    measured, not assumed) with answers identical to
+                    sequential ones;
+  * predictor-only — KNN/RF predictors + an expired deadline; provenance
+                    verdict and p50/p99 latency.
+
+Persists ``BENCH_serving.json`` with all verdicts and latency percentiles;
+hard gates (identity on every cell, fallback parity, one-launch batching,
+batched==sequential) assert AFTER the artifact is written so a red run
+still uploads evidence.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import platform
+import time
+
+import numpy as np
+
+from benchmarks.common import (ART_DIR, OUT_DIR, csv_row, ensure_artifacts,
+                               write_report)
+from repro.core import dataset, dse, predictors
+from repro.dse_campaign import (Campaign, CampaignConfig,
+                                frontiers_identical, tiny_campaign_space)
+from repro.serving.engine import SelectionEngine
+from repro.serving.frontier_index import FrontierIndex
+
+SERVING_BENCH_NAME = "BENCH_serving.json"
+INDEX_ARTIFACT_NAME = "frontier_index.json"
+HIT_REPEATS = 30          # index-hit latency samples per cached cell
+MINI_REPEATS = 8          # mini-campaign latency samples (each a real sweep)
+
+
+def _pcts(samples_s) -> dict:
+    s = np.asarray(samples_s, np.float64) * 1e3
+    return {"n": int(s.size),
+            "p50_ms": float(np.percentile(s, 50)),
+            "p99_ms": float(np.percentile(s, 99)),
+            "mean_ms": float(s.mean())}
+
+
+def _perturb(wl: dse.Workload, scale: float) -> dse.Workload:
+    """A novel workload family: the cached census uniformly scaled — the
+    cost model sees a different key, so the index cannot serve it."""
+    return dse.Workload(wl.arch, wl.shape,
+                        {k: v * scale for k, v in wl.base_analysis.items()},
+                        wl.base_chips, wl.state_gb_per_device)
+
+
+def run() -> list:
+    ensure_artifacts()
+    cfg = CampaignConfig(
+        space=tiny_campaign_space(chunk_size=128), evaluator="jit",
+        constraint=dse.Constraint(max_power_w=40_000, min_hbm_fit=False))
+    campaign = Campaign.from_artifacts(ART_DIR, cfg)
+    offline = campaign.run()
+    assert offline.complete
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    index_path = FrontierIndex.from_campaign(campaign).save(
+        os.path.join(OUT_DIR, INDEX_ARTIFACT_NAME))
+    index = FrontierIndex.load(index_path)
+
+    # -- index-hit: identity on every cached cell + latency -----------------
+    engine = SelectionEngine(index)
+    hit_lat, identity = [], {}
+    for wl in campaign.workloads:
+        key = (wl.arch, wl.shape)
+        answer = engine.select(wl)                   # correctness probe
+        identity["|".join(key)] = bool(
+            answer.provenance == "index_exact"
+            and frontiers_identical(answer.frontier(), offline.frontiers[key]))
+        for _ in range(HIT_REPEATS):
+            t0 = time.perf_counter()
+            engine.select(wl)
+            hit_lat.append(time.perf_counter() - t0)
+    launches_during_hits = engine.fused_launches
+
+    # -- mini-campaign: novel-family fallback + latency ---------------------
+    novel = [_perturb(wl, 1.0 + 0.03 * (i + 1))
+             for i, wl in enumerate(campaign.workloads)]
+    probe = engine.select(novel[0])
+    standalone = Campaign([novel[0]], engine.config).run()
+    fallback_parity = bool(
+        probe.provenance == "mini_campaign"
+        and frontiers_identical(
+            probe.frontier(),
+            standalone.frontiers[(novel[0].arch, novel[0].shape)]))
+    mini_lat = []
+    for i in range(MINI_REPEATS):
+        q = _perturb(novel[i % len(novel)], 1.0 + 1e-4 * (i + 1))
+        t0 = time.perf_counter()
+        a = engine.select(q)
+        mini_lat.append(time.perf_counter() - t0)
+        assert a.provenance == "mini_campaign"
+
+    # -- batched window: one fused launch, answers == sequential ------------
+    batch_engine = SelectionEngine(index)
+    for wl in novel:
+        batch_engine.submit(wl)
+    batch_engine.submit(campaign.workloads[0])       # hit rides along
+    before = batch_engine.fused_launches
+    t0 = time.perf_counter()
+    batched = batch_engine.flush()
+    batched_wall_s = time.perf_counter() - t0
+    batched_launches = batch_engine.fused_launches - before
+    seq_engine = SelectionEngine(index)
+    batched_eq_sequential = all(
+        frontiers_identical(got.frontier(), seq_engine.select(wl).frontier())
+        for wl, got in zip(novel, batched))
+
+    # -- predictor-only: deadline degradation -------------------------------
+    X, y_power, y_cycles, _ = dataset.build_dataset(ART_DIR)
+    rf = predictors.RandomForestRegressor().fit(X, y_power)
+    knn = predictors.KNNRegressor().fit(X, y_cycles)
+    deg_engine = SelectionEngine(index, SelectionEngine._config_from_index(
+        index).replace(power_model=rf, cycles_model=knn))
+    deg_lat, deg_prov = [], []
+    for i in range(HIT_REPEATS):
+        q = _perturb(novel[i % len(novel)], 1.0 + 2e-4 * (i + 1))
+        t0 = time.perf_counter()
+        a = deg_engine.select(q, deadline_s=0.0)
+        deg_lat.append(time.perf_counter() - t0)
+        deg_prov.append(a.provenance)
+    predictor_only_ok = all(p == "predictor_only" for p in deg_prov)
+
+    payload = {
+        "bench": "serving",
+        "python": platform.python_version(),
+        "space": cfg.space.to_dict(),
+        "workloads": sorted("|".join(k) for k in offline.frontiers),
+        "index_path": index_path,
+        "index_families": len(index),
+        "latency": {
+            "index_hit": _pcts(hit_lat),
+            "mini_campaign": _pcts(mini_lat),
+            "predictor_only": _pcts(deg_lat),
+        },
+        "verdicts": {
+            "answers_identity_per_cell": identity,
+            "answers_identity_all_cells": all(identity.values()),
+            "index_hits_launch_no_sweep": launches_during_hits == 0,
+            "novel_fallback_parity": fallback_parity,
+            "batched_one_fused_launch": batched_launches == 1,
+            "batched_equals_sequential": batched_eq_sequential,
+            "deadline_degrades_to_predictor_only": predictor_only_ok,
+        },
+        "batched": {
+            "queries": len(batched),
+            "fused_launches": int(batched_launches),
+            "wall_s": batched_wall_s,
+            "provenance": [a.provenance for a in batched],
+        },
+        "stats": dict(engine.stats),
+    }
+    path = os.path.join(OUT_DIR, SERVING_BENCH_NAME)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+    report = ["# Serving benchmark", "",
+              f"families indexed: {len(index)}", "",
+              "| path | p50 ms | p99 ms |", "|---|---|---|"]
+    for name in ("index_hit", "mini_campaign", "predictor_only"):
+        p = payload["latency"][name]
+        report.append(f"| {name} | {p['p50_ms']:.2f} | {p['p99_ms']:.2f} |")
+    report += ["", "verdicts: " + ", ".join(
+        f"{k}={v}" for k, v in payload["verdicts"].items()
+        if k != "answers_identity_per_cell")]
+    write_report("serving.md", "\n".join(report) + "\n")
+
+    # gates — AFTER the artifact is on disk
+    assert payload["verdicts"]["answers_identity_all_cells"], (
+        "served index answers diverged from offline campaign picks", identity)
+    assert launches_during_hits == 0, "an index hit triggered a sweep"
+    assert fallback_parity, "mini-campaign fallback diverged from standalone"
+    assert batched_launches == 1, (
+        f"batched flush used {batched_launches} fused launches, expected 1")
+    assert batched_eq_sequential, "batched answers != sequential answers"
+    assert predictor_only_ok, f"degraded provenances: {set(deg_prov)}"
+
+    hit = payload["latency"]["index_hit"]
+    mini = payload["latency"]["mini_campaign"]
+    deg = payload["latency"]["predictor_only"]
+    return [
+        csv_row("serving_index_hit", hit["p50_ms"] * 1e3,
+                f"p99={hit['p99_ms']:.2f}ms identity="
+                f"{payload['verdicts']['answers_identity_all_cells']}"),
+        csv_row("serving_mini_campaign", mini["p50_ms"] * 1e3,
+                f"p99={mini['p99_ms']:.2f}ms parity={fallback_parity}"),
+        csv_row("serving_predictor_only", deg["p50_ms"] * 1e3,
+                f"p99={deg['p99_ms']:.2f}ms"),
+        csv_row("serving_batched", batched_wall_s * 1e6 / len(batched),
+                f"queries={len(batched)} fused_launches={batched_launches}"),
+    ]
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -20,8 +20,9 @@ import argparse
 import os
 
 from repro.core import dse
-from repro.dse_campaign import (Campaign, FaultInjection, MultiprocessFabric,
-                                frontiers_identical, tiny_campaign_space)
+from repro.dse_campaign import (Campaign, CampaignConfig, FaultInjection,
+                                MultiprocessFabric, frontiers_identical,
+                                tiny_campaign_space)
 
 ART = os.path.join(os.getcwd(), "experiments", "dryrun")
 
@@ -36,12 +37,13 @@ if __name__ == "__main__":
     args = ap.parse_args()
 
     spec = tiny_campaign_space(chunk_size=64)
-    cons = dse.Constraint(max_power_w=40_000, min_hbm_fit=False)
+    cfg = CampaignConfig(
+        space=spec, evaluator=args.evaluator, n_workers=args.workers,
+        constraint=dse.Constraint(max_power_w=40_000, min_hbm_fit=False))
     print(f"evaluator: {args.evaluator}; space: {len(spec)} candidates in "
           f"{spec.n_tiles()} tiles of {spec.chunk_size}")
 
-    single = Campaign.from_artifacts(ART, spec, constraint=cons,
-                                     evaluator=args.evaluator).run()
+    single = Campaign.from_artifacts(ART, cfg).run()
     print(f"single process: {single.candidates_evaluated} evaluations, "
           f"{sum(len(f) for f in single.frontiers.values())} frontier points")
 
@@ -52,8 +54,7 @@ if __name__ == "__main__":
         # delivered payload is also folded twice (at-least-once delivery).
         fault = FaultInjection(kill_worker=args.workers - 1,
                                kill_after_tiles=1, duplicate=True)
-    campaign = Campaign.from_artifacts(ART, spec, constraint=cons,
-                                       evaluator=args.evaluator)
+    campaign = Campaign.from_artifacts(ART, cfg)
     fabric = MultiprocessFabric(campaign, n_workers=args.workers, fault=fault)
     result = fabric.run()
     assert result.complete

@@ -18,8 +18,8 @@ import os
 import tempfile
 
 from repro.core import dse
-from repro.dse_campaign import (Campaign, frontiers_identical,
-                                tiny_campaign_space)
+from repro.dse_campaign import (Campaign, CampaignConfig,
+                                frontiers_identical, tiny_campaign_space)
 
 ART = os.path.join(os.getcwd(), "experiments", "dryrun")
 
@@ -30,11 +30,12 @@ if __name__ == "__main__":
                     choices=("numpy", "jit", "pallas"))
     args = ap.parse_args()
     spec = tiny_campaign_space(chunk_size=128)
-    cons = dse.Constraint(max_power_w=40_000, min_hbm_fit=False)
+    cfg = CampaignConfig(
+        space=spec, evaluator=args.evaluator,
+        constraint=dse.Constraint(max_power_w=40_000, min_hbm_fit=False))
     ckpt = os.path.join(tempfile.mkdtemp(prefix="dse_campaign_"), "ckpt.json")
 
-    campaign = Campaign.from_artifacts(ART, spec, constraint=cons,
-                                       evaluator=args.evaluator)
+    campaign = Campaign.from_artifacts(ART, cfg)
     print(f"evaluator: {args.evaluator}")
     n_tiles = spec.n_tiles()
     cut = n_tiles // 2
@@ -53,8 +54,7 @@ if __name__ == "__main__":
     final = resumed.run(checkpoint_path=ckpt)
     assert final.complete
 
-    fresh = Campaign.from_artifacts(ART, spec, constraint=cons,
-                                    evaluator=args.evaluator).run()
+    fresh = Campaign.from_artifacts(ART, cfg).run()
     identical = all(frontiers_identical(final.frontiers[k], fresh.frontiers[k])
                     for k in fresh.frontiers)
     print(f"\nresumed final frontier == uninterrupted fresh run: {identical}")

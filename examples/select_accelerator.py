@@ -1,0 +1,101 @@
+"""Accelerator selection end to end: campaign -> frontier index -> queries.
+
+An offline campaign sweeps the design space for every cached dry-run
+workload; its Pareto frontiers are frozen into a versioned ``FrontierIndex``
+artifact (real save/load round trip).  A ``SelectionEngine`` then answers
+``select(workload, constraints)`` queries three ways, and this demo proves
+each path:
+
+  * cached workloads  -> ``index_exact``: the served frontier is IDENTICAL
+    to the offline campaign pick, with zero sweep launches;
+  * a novel workload  -> ``mini_campaign``: the fused exact fallback, with
+    answers identical to a standalone campaign over the same space;
+  * expired deadline  -> ``predictor_only``: ranked by the learned power /
+    performance predictors, stamped inexact.
+
+  python examples/select_accelerator.py
+
+CI runs this as a gating step right after the campaign smoke; it shares the
+same dry-run artifacts.  See docs/serving.md for the serving runbook.
+"""
+
+import os
+import tempfile
+
+from repro.core import dataset, dse, predictors
+from repro.dse_campaign import (Campaign, CampaignConfig,
+                                frontiers_identical, tiny_campaign_space)
+from repro.select import FrontierIndex, SelectionEngine
+
+ART = os.path.join(os.getcwd(), "experiments", "dryrun")
+
+
+def perturbed(wl: dse.Workload, scale: float) -> dse.Workload:
+    """A novel workload family: same arch/shape, census uniformly scaled."""
+    return dse.Workload(wl.arch, wl.shape,
+                        {k: v * scale for k, v in wl.base_analysis.items()},
+                        wl.base_chips, wl.state_gb_per_device)
+
+
+if __name__ == "__main__":
+    cfg = CampaignConfig(
+        space=tiny_campaign_space(chunk_size=128), evaluator="jit",
+        constraint=dse.Constraint(max_power_w=40_000, min_hbm_fit=False))
+    campaign = Campaign.from_artifacts(ART, cfg)
+    print(f"offline campaign: {len(cfg.space)} candidates x "
+          f"{len(campaign.workloads)} workloads")
+    offline = campaign.run()
+    assert offline.complete
+
+    index_path = os.path.join(
+        tempfile.mkdtemp(prefix="frontier_index_"), "frontier_index.json")
+    FrontierIndex.from_campaign(campaign).save(index_path)
+    index = FrontierIndex.load(index_path)
+    print(f"frontier index: {len(index)} workload families -> {index_path} "
+          f"({os.path.getsize(index_path)} bytes)")
+
+    # -- cached workloads: index hits, identical to the offline picks -------
+    engine = SelectionEngine(index)
+    print("\ncached workloads (index_exact):")
+    for wl in campaign.workloads:
+        answer = engine.select(wl)
+        identical = frontiers_identical(
+            answer.frontier(), offline.frontiers[(wl.arch, wl.shape)])
+        best = answer.choices[0]
+        mesh = "x".join(map(str, best.candidate.mesh))
+        print(f"  {wl.arch:>14} x {wl.shape}: [{answer.provenance}] "
+              f"{best.candidate.chip} x{best.candidate.n_chips} mesh {mesh} "
+              f"({answer.wall_s * 1e3:.2f} ms)  == offline: {identical}")
+        assert answer.provenance == "index_exact", answer.provenance
+        assert identical, "served answer diverged from offline campaign pick"
+    assert engine.fused_launches == 0, "an index hit triggered a sweep"
+
+    # -- a novel family: exact mini-campaign fallback -----------------------
+    novel = perturbed(campaign.workloads[0], 1.07)
+    answer = engine.select(novel)
+    standalone = Campaign([novel], engine.config).run()
+    parity = frontiers_identical(
+        answer.frontier(), standalone.frontiers[(novel.arch, novel.shape)])
+    best = answer.choices[0]
+    print(f"\nnovel workload (census x1.07): [{answer.provenance}] "
+          f"{best.candidate.chip} x{best.candidate.n_chips} "
+          f"({answer.wall_s * 1e3:.2f} ms)  == standalone campaign: {parity}")
+    assert answer.provenance == "mini_campaign", answer.provenance
+    assert parity, "mini-campaign fallback diverged from standalone campaign"
+
+    # -- expired deadline + fitted predictors: degraded answers -------------
+    X, y_power, y_cycles, _ = dataset.build_dataset(ART)
+    deg = SelectionEngine(index, engine.config.replace(
+        power_model=predictors.RandomForestRegressor().fit(X, y_power),
+        cycles_model=predictors.KNNRegressor().fit(X, y_cycles)))
+    answer = deg.select(perturbed(campaign.workloads[0], 1.11), deadline_s=0.0)
+    best = answer.choices[0]
+    print(f"deadline expired:              [{answer.provenance}] "
+          f"{best.candidate.chip} x{best.candidate.n_chips} "
+          f"(exact={best.exact}, {answer.wall_s * 1e3:.2f} ms)")
+    assert answer.provenance == "predictor_only", answer.provenance
+    assert not best.exact
+
+    print(f"\nengine stats: {dict(engine.stats)}; "
+          f"fused launches: {engine.fused_launches}")
+    print("all selection paths verified OK")

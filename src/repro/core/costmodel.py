@@ -19,9 +19,10 @@ Latency model:
                + 2 * (k - 1) * hop_s
 
   with per-axis link counts from ``hw.axis_link_counts`` (ring vs. torus
-  wraparound, chip link-budget degradation).  Without a mesh the legacy
-  scalar fallback ``wire_bytes / (ici_bw * links_used)`` applies
-  (``SimConfig.links_used`` is deprecated and only feeds this fallback).
+  wraparound, chip link-budget degradation).  Without a mesh the fixed
+  mesh-less approximation ``wire_bytes / (ici_bw * MESHLESS_LINKS)``
+  applies (the former ``SimConfig.links_used`` knob is gone; see
+  ``SIM_MODEL_VERSION``).
   latency = max(t) + (1 - overlap) * (sum(t) - max(t))
     -- overlap=0.8: XLA latency-hiding overlaps most, not all, of the
        non-dominant terms.
@@ -35,7 +36,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Dict, Optional
 
 import numpy as np
@@ -52,8 +52,20 @@ COLL_MODEL_FRAC = 0.5
 
 # bump when the cost model's arithmetic changes on purpose: the CI frontier
 # compare (benchmarks/compare_campaign.py) only gates hypervolume regressions
-# between artifacts produced by the SAME model version
-SIM_MODEL_VERSION = 2   # 1 = mesh-agnostic links_used; 2 = topology-aware
+# between artifacts produced by the SAME model version.  Checkpoints,
+# fabric worker configs and FrontierIndex artifacts all stamp this number
+# and refuse to load across a mismatch.
+# 1 = mesh-agnostic links_used; 2 = topology-aware collectives;
+# 3 = SimConfig.links_used removed (mesh-less simulation is the fixed
+#     MESHLESS_LINKS approximation, no longer a config knob)
+SIM_MODEL_VERSION = 3
+
+# link count of the fixed mesh-less approximation: censuses simulated
+# without a candidate mesh (dry-run base pods, offload slices, rooflines)
+# price collectives as ``wire_bytes / (ici_bw * MESHLESS_LINKS)``.  This is
+# the old ``links_used`` default frozen in place — candidate sweeps always
+# carry a mesh and never touch it.
+MESHLESS_LINKS = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,18 +74,7 @@ class SimConfig:
     w_mxu: float = 0.55
     w_hbm: float = 0.30
     w_ici: float = 0.15
-    links_used: int = 2          # DEPRECATED: only the mesh-less fallback
-                                 # path reads this; topology-aware simulation
-                                 # derives links from hw.axis_link_counts
     coll_model_frac: float = COLL_MODEL_FRAC
-
-    def __post_init__(self):
-        if self.links_used != 2:
-            warnings.warn(
-                "SimConfig.links_used is deprecated: the collective model is "
-                "topology-aware (pass the candidate mesh to simulate / "
-                "simulate_batch); links_used only affects the mesh-less "
-                "fallback path", DeprecationWarning, stacklevel=2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -181,10 +182,10 @@ def simulate(analysis: Dict, chip: ChipSpec, n_chips: int,
     """Slow-accurate path: deterministic latency/power from a compiled cell.
 
     With ``mesh`` (the candidate's mesh tuple) the collective term is the
-    topology-aware per-axis model; without it the deprecated mesh-agnostic
-    ``links_used`` fallback applies.  The topology arithmetic runs through
-    the same xp-generic helpers as ``simulate_batch``, so scalar and batch
-    agree bitwise."""
+    topology-aware per-axis model; without it the fixed mesh-less
+    ``MESHLESS_LINKS`` approximation applies.  The topology arithmetic runs
+    through the same xp-generic helpers as ``simulate_batch``, so scalar
+    and batch agree bitwise."""
     if freq_mhz is None:
         freq_mhz = chip.nominal_freq_mhz
     chip_f = chip.at_frequency(freq_mhz)
@@ -198,7 +199,7 @@ def simulate(analysis: Dict, chip: ChipSpec, n_chips: int,
             p_d, p_m, pod, data, model, chip_f.ici_bw, chip_f.ici_links,
             chip_f.ici_links_per_axis, chip_f.ici_hop_s))
     else:
-        t_coll = (wire / (chip_f.ici_bw * max(sim.links_used, 1))
+        t_coll = (wire / (chip_f.ici_bw * MESHLESS_LINKS)
                   if chip_f.ici_bw else 0.0)
 
     ts = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
@@ -290,7 +291,8 @@ def simulate_batch(analysis: Dict, chip_idx, n_chips,
     indexes ``table``; ``n_chips`` / ``freq_mhz`` are per-candidate arrays.
     With ``mesh_data``/``mesh_model`` (and optionally ``mesh_pod``) the
     collective term is the topology-aware per-axis model; without them the
-    deprecated ``links_used`` fallback applies.  With the default ``xp=np``
+    fixed mesh-less ``MESHLESS_LINKS`` approximation applies.  With the
+    default ``xp=np``
     the arithmetic is float64 and agrees with the scalar path to machine
     precision; any array namespace with the numpy API (e.g. ``jax.numpy``)
     works, making the body jit-able.  ``gathered`` (from
@@ -335,7 +337,7 @@ def simulate_batch(analysis: Dict, chip_idx, n_chips,
         has_ici = ici_bw > 0
         t_coll = xp.where(
             has_ici,
-            wire / (xp.where(has_ici, ici_bw, 1.0) * max(sim.links_used, 1)),
+            wire / (xp.where(has_ici, ici_bw, 1.0) * MESHLESS_LINKS),
             0.0)
 
     ts = xp.stack([t_comp, t_mem, t_coll])         # BOTTLENECKS order

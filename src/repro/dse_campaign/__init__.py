@@ -12,8 +12,14 @@ skyline provably identical to one-shot ``dse.pareto_search``.  The
 coordinator leases tile indices, workers ship ``TileReduction`` payloads —
 with a frontier bitwise-identical to the single-process run regardless of
 worker count, interleaving, or worker loss.
+
+Every entry point — ``Campaign``, ``TileEvaluator``, ``run_distributed``,
+and the serving layer's ``SelectionEngine`` (``repro.select``) — constructs
+from one frozen ``CampaignConfig``; the pre-config keyword constructors
+still work but emit ``DeprecationWarning``.
 """
 
+from repro.dse_campaign.config import EVALUATORS, CampaignConfig
 from repro.dse_campaign.fabric import (FabricCoordinator, FakeClock,
                                        FaultInjection, LeaseBoard,
                                        LocalFabric, MultiprocessFabric,
@@ -33,12 +39,12 @@ from repro.dse_campaign.space import (DEFAULT_VARIANTS, SliceVariant,
 from repro.dse_campaign import store
 
 __all__ = [
-    "Campaign", "CampaignResult", "DEFAULT_VARIANTS", "FabricCoordinator",
-    "FakeClock", "FaultInjection", "FrontierSnapshot", "LeaseBoard",
-    "LocalFabric", "MultiprocessFabric", "SliceVariant", "SpaceSpec",
-    "StreamingFrontier", "TileEvaluator", "TileReduction", "TileStat",
-    "campaign_config", "candidate_from_dict", "candidate_to_dict",
-    "canonical_frontier", "default_campaign_space", "evaluator_from_config",
-    "frontiers_identical", "hypervolume_2d", "run_distributed", "store",
-    "tile_span", "tiny_campaign_space",
+    "Campaign", "CampaignConfig", "CampaignResult", "DEFAULT_VARIANTS",
+    "EVALUATORS", "FabricCoordinator", "FakeClock", "FaultInjection",
+    "FrontierSnapshot", "LeaseBoard", "LocalFabric", "MultiprocessFabric",
+    "SliceVariant", "SpaceSpec", "StreamingFrontier", "TileEvaluator",
+    "TileReduction", "TileStat", "campaign_config", "candidate_from_dict",
+    "candidate_to_dict", "canonical_frontier", "default_campaign_space",
+    "evaluator_from_config", "frontiers_identical", "hypervolume_2d",
+    "run_distributed", "store", "tile_span", "tiny_campaign_space",
 ]

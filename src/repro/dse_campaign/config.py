@@ -1,0 +1,150 @@
+"""The one campaign configuration object.
+
+``CampaignConfig`` is the single, frozen description of *how* to evaluate a
+design space: the space itself, the evaluator tier, the constraint and
+``SimConfig``, pipeline/survivor knobs, checkpoint policy and the
+distributed-fabric options.  Every entry point of the campaign stack —
+``Campaign``, ``TileEvaluator``, ``fabric.run_distributed`` and the serving
+layer's ``SelectionEngine`` — constructs from one of these, so a config can
+be built once and handed to any of the four without translation.  Workloads
+are deliberately NOT part of the config: they are data (the thing being
+evaluated), and the same config is reused across workload sets — offline
+campaigns, fabric workers and serving mini-campaigns all share it.
+
+The pre-config keyword constructors (``Campaign(workloads, space,
+evaluator=...)`` etc.) still work through a thin shim that builds the
+equivalent ``CampaignConfig`` and emits a ``DeprecationWarning``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core import costmodel, dse
+from repro.dse_campaign.space import SpaceSpec
+
+# evaluator tiers understood by TileEvaluator (see runner.py for semantics)
+EVALUATORS = ("numpy", "jit", "fast", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignConfig:
+    """Frozen configuration shared by every campaign/serving entry point.
+
+    Field groups:
+
+    * evaluation — ``space`` (the ``SpaceSpec`` to sweep; ``chunk_size``
+      optionally overrides its tile size without rebuilding it),
+      ``evaluator`` (one of ``EVALUATORS``), ``constraint`` (``None`` means
+      the default ``dse.Constraint()``), ``sim``, ``pipeline`` /
+      ``max_survivors`` (fused-path knobs), and the fitted
+      ``power_model`` / ``cycles_model`` the ``"fast"`` evaluator and the
+      serving layer's predictor paths need (unserializable — never
+      checkpointed, must be re-passed on resume);
+    * checkpointing — ``checkpoint_every`` (tiles between saves) and
+      ``checkpoint_path`` (default path ``Campaign.run`` persists to);
+    * fabric — ``n_workers`` / ``lease_timeout_s`` for
+      ``run_distributed``.
+
+    The dataclass is frozen so a config can be shared between a campaign,
+    its fabric workers and a serving engine without aliasing surprises; use
+    ``replace`` to derive variants.
+    """
+
+    space: SpaceSpec
+    evaluator: str = "numpy"
+    constraint: Optional[dse.Constraint] = None
+    sim: costmodel.SimConfig = costmodel.SimConfig()
+    power_model: Any = None
+    cycles_model: Any = None
+    pipeline: bool = True
+    max_survivors: int = 2048
+    chunk_size: Optional[int] = None
+    checkpoint_every: int = 1
+    checkpoint_path: Optional[str] = None
+    n_workers: int = 2
+    lease_timeout_s: float = 300.0
+
+    def __post_init__(self):
+        if not isinstance(self.space, SpaceSpec):
+            raise TypeError(f"CampaignConfig.space must be a SpaceSpec, got "
+                            f"{type(self.space).__name__}")
+        if self.evaluator not in EVALUATORS:
+            raise ValueError(f"unknown evaluator {self.evaluator!r}; expected "
+                             f"one of {EVALUATORS}")
+        if self.evaluator == "fast" and (self.power_model is None
+                                         or self.cycles_model is None):
+            raise ValueError("evaluator='fast' needs fitted power_model and "
+                             "cycles_model")
+        if self.chunk_size is not None and self.chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {self.chunk_size}")
+        if self.max_survivors < 1:
+            raise ValueError("max_survivors must be >= 1")
+        if self.checkpoint_every < 1:
+            raise ValueError("checkpoint_every must be >= 1")
+        if self.n_workers < 1:
+            raise ValueError("n_workers must be >= 1")
+
+    @property
+    def resolved_space(self) -> SpaceSpec:
+        """``space`` with the ``chunk_size`` override applied (if any)."""
+        if self.chunk_size is None or self.chunk_size == self.space.chunk_size:
+            return self.space
+        return dataclasses.replace(self.space, chunk_size=self.chunk_size)
+
+    @property
+    def resolved_constraint(self) -> dse.Constraint:
+        """``constraint`` with ``None`` resolved to the default."""
+        return self.constraint if self.constraint is not None else dse.Constraint()
+
+    def replace(self, **changes) -> "CampaignConfig":
+        """A copy with ``changes`` applied (``dataclasses.replace``)."""
+        return dataclasses.replace(self, **changes)
+
+
+# keyword names the legacy constructor shims accept, per entry point; the
+# shim maps them 1:1 onto CampaignConfig fields
+_EVALUATOR_LEGACY = ("constraint", "evaluator", "sim", "power_model",
+                     "cycles_model", "pipeline", "max_survivors")
+_CAMPAIGN_LEGACY = _EVALUATOR_LEGACY + ("checkpoint_every",)
+
+
+def coerce_config(owner: str, config, legacy: Dict,
+                  allowed: Tuple[str, ...]) -> CampaignConfig:
+    """Resolve an entry point's ``(config, **kwargs)`` into a CampaignConfig.
+
+    ``config`` is either a ``CampaignConfig`` (the documented surface — any
+    extra keyword then raises) or, on the deprecated pre-config surface, the
+    old positional ``space`` argument (alternatively passed as ``space=``)
+    plus the old keyword set in ``legacy``; that path still works but emits
+    a ``DeprecationWarning`` pointing at ``CampaignConfig``.
+    """
+    if isinstance(config, CampaignConfig):
+        if legacy:
+            raise TypeError(
+                f"{owner}: pass either a CampaignConfig or the legacy "
+                f"keyword arguments, not both (got {sorted(legacy)})")
+        return config
+    if isinstance(config, SpaceSpec):
+        if "space" in legacy:
+            raise TypeError(f"{owner}: space given both positionally and by "
+                            "keyword")
+        legacy = {"space": config, **legacy}
+    elif config is not None:
+        raise TypeError(
+            f"{owner}: second argument must be a CampaignConfig (or, "
+            f"deprecated, a SpaceSpec), got {type(config).__name__}")
+    unknown = set(legacy) - set(allowed) - {"space"}
+    if unknown:
+        raise TypeError(f"{owner}: unexpected keyword arguments "
+                        f"{sorted(unknown)}")
+    if "space" not in legacy:
+        raise TypeError(f"{owner}: no space given — pass a CampaignConfig")
+    warnings.warn(
+        f"{owner}(workloads, space, ...) keyword construction is "
+        "deprecated: build a repro.dse_campaign.CampaignConfig and pass it "
+        "as the single configuration argument", DeprecationWarning,
+        stacklevel=3)
+    return CampaignConfig(**legacy)

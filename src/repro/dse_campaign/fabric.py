@@ -48,12 +48,14 @@ import multiprocessing as mp
 import os
 import queue as queue_mod
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core import costmodel, dse
 from repro.dse_campaign import store
+from repro.dse_campaign.config import CampaignConfig
 from repro.dse_campaign.runner import (Campaign, CampaignResult, TileEvaluator,
                                        TileReduction, TileStat,
                                        workload_from_dict, workload_to_dict)
@@ -137,12 +139,13 @@ def evaluator_from_config(cfg: Dict) -> TileEvaluator:
             "frontier")
     return TileEvaluator(
         [workload_from_dict(w) for w in cfg["workloads"]],
-        SpaceSpec.from_dict(cfg["space"]),
-        constraint=dse.Constraint(**cfg["constraint"]),
-        evaluator=cfg["evaluator"],
-        sim=costmodel.SimConfig(**cfg["sim"]),
-        pipeline=cfg["pipeline"],
-        max_survivors=cfg["max_survivors"])
+        CampaignConfig(
+            space=SpaceSpec.from_dict(cfg["space"]),
+            constraint=dse.Constraint(**cfg["constraint"]),
+            evaluator=cfg["evaluator"],
+            sim=costmodel.SimConfig(**cfg["sim"]),
+            pipeline=cfg["pipeline"],
+            max_survivors=cfg["max_survivors"]))
 
 
 # ---------------------------------------------------------------------------
@@ -735,16 +738,53 @@ class MultiprocessFabric:
         return coord.result(window_s)
 
 
-def run_distributed(campaign: Campaign, n_workers: int = 2,
-                    lease_timeout_s: float = 300.0,
-                    checkpoint_path: Optional[str] = None,
-                    fault: Optional[FaultInjection] = None
-                    ) -> Tuple[CampaignResult, Dict]:
-    """One-call distributed sweep: run ``campaign`` on ``n_workers`` spawn
-    processes; returns ``(CampaignResult, fabric stats)``.  The result's
-    frontiers are bitwise-identical to ``campaign.run()`` single-process.
+def run_distributed(workloads_or_campaign, config: CampaignConfig = None,
+                    fault: Optional[FaultInjection] = None,
+                    **legacy) -> Tuple[CampaignResult, Dict]:
+    """One-call distributed sweep; returns ``(CampaignResult, fabric stats)``.
+
+    The documented surface is ``run_distributed(workloads, config)``: the
+    ``CampaignConfig`` supplies the space/evaluator AND the fabric options
+    (``n_workers``, ``lease_timeout_s``, ``checkpoint_path``) — the same
+    config object the ``Campaign`` / ``TileEvaluator`` / ``SelectionEngine``
+    entry points construct from.  Passing an already-built ``Campaign``
+    also works (its own config drives the fabric); the pre-config keyword
+    form ``run_distributed(campaign, n_workers=..., lease_timeout_s=...,
+    checkpoint_path=...)`` still works but emits a ``DeprecationWarning``.
+
+    The result's frontiers are bitwise-identical to ``Campaign.run``
+    single-process on the same config.
     """
-    fabric = MultiprocessFabric(campaign, n_workers=n_workers,
-                                lease_timeout_s=lease_timeout_s, fault=fault)
-    result = fabric.run(checkpoint_path=checkpoint_path)
+    if isinstance(workloads_or_campaign, Campaign):
+        campaign = workloads_or_campaign
+        if config is not None:
+            raise TypeError("run_distributed: pass either a Campaign (which "
+                            "carries its config) or (workloads, config), "
+                            "not both")
+        cfg = campaign.config
+        if legacy:
+            unknown = set(legacy) - {"n_workers", "lease_timeout_s",
+                                     "checkpoint_path"}
+            if unknown:
+                raise TypeError(f"run_distributed: unexpected keyword "
+                                f"arguments {sorted(unknown)}")
+            warnings.warn(
+                "run_distributed(campaign, n_workers=..., ...) keyword "
+                "options are deprecated: set n_workers / lease_timeout_s / "
+                "checkpoint_path on the CampaignConfig instead",
+                DeprecationWarning, stacklevel=2)
+            cfg = cfg.replace(**legacy)
+    else:
+        if legacy:
+            raise TypeError(f"run_distributed(workloads, config) takes no "
+                            f"extra keyword arguments (got {sorted(legacy)})")
+        if not isinstance(config, CampaignConfig):
+            raise TypeError("run_distributed(workloads, config) needs a "
+                            "CampaignConfig")
+        campaign = Campaign(workloads_or_campaign, config)
+        cfg = config
+    fabric = MultiprocessFabric(campaign, n_workers=cfg.n_workers,
+                                lease_timeout_s=cfg.lease_timeout_s,
+                                fault=fault)
+    result = fabric.run(checkpoint_path=cfg.checkpoint_path)
     return result, fabric.stats

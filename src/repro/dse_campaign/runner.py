@@ -53,12 +53,13 @@ import numpy as np
 from repro.configs.base import SHAPES, get_config
 from repro.core import costmodel, dataset, dse
 from repro.dse_campaign import store
+from repro.dse_campaign.config import (EVALUATORS, CampaignConfig,
+                                       _CAMPAIGN_LEGACY, _EVALUATOR_LEGACY,
+                                       coerce_config)
 from repro.dse_campaign.frontier import StreamingFrontier
 from repro.dse_campaign.space import SpaceSpec
 
 WorkloadKey = Tuple[str, str]
-
-EVALUATORS = ("numpy", "jit", "fast", "pallas")
 
 
 def workload_to_dict(wl: dse.Workload) -> Dict:
@@ -244,40 +245,41 @@ class TileEvaluator:
     (or even overlapping) tiles and their reductions fold into one frontier
     without coordination beyond the merge itself.
 
-    ``evaluator`` selects the engine: ``"numpy"`` (float64 per-workload
-    simulator, bitwise-identical to one-shot ``pareto_search``), ``"jit"``
-    (fused float32 multi-workload sweep; ``pipeline=False`` falls back to
-    the legacy per-workload jit loop), ``"pallas"`` (the fused Pallas
-    DSE-sweep kernel), or ``"fast"`` (trained predictors; requires fitted
-    ``power_model``/``cycles_model`` and — being unpicklable — is refused
-    by the distributed fabric).
+    Constructed from a ``CampaignConfig`` (``config.evaluator`` selects the
+    engine: ``"numpy"`` — float64 per-workload simulator, bitwise-identical
+    to one-shot ``pareto_search`` —, ``"jit"`` — fused float32
+    multi-workload sweep; ``pipeline=False`` falls back to the legacy
+    per-workload jit loop —, ``"pallas"`` — the fused Pallas DSE-sweep
+    kernel — or ``"fast"`` — trained predictors; requires fitted
+    ``power_model``/``cycles_model`` and, being unpicklable, is refused by
+    the distributed fabric).  The pre-config keyword form
+    ``TileEvaluator(workloads, space, evaluator=..., ...)`` still works but
+    emits a ``DeprecationWarning``.
+
+    ``fused_launches`` counts fused multi-workload sweep launches
+    (``sweep_reduced`` calls) over this evaluator's lifetime — the serving
+    layer's "batched concurrent queries ride ONE launch" assertion reads
+    it, so the claim is measured rather than assumed.
     """
 
-    def __init__(self, workloads: Sequence[dse.Workload], space: SpaceSpec,
-                 constraint: dse.Constraint = None,
-                 evaluator: str = "numpy",
-                 sim: costmodel.SimConfig = costmodel.SimConfig(),
-                 power_model=None, cycles_model=None,
-                 pipeline: bool = True,
-                 max_survivors: int = 2048):
-        if evaluator not in EVALUATORS:
-            raise ValueError(f"unknown evaluator {evaluator!r}; expected one "
-                             f"of {EVALUATORS}")
-        if evaluator == "fast" and (power_model is None or cycles_model is None):
-            raise ValueError("evaluator='fast' needs fitted power_model and "
-                             "cycles_model")
+    def __init__(self, workloads: Sequence[dse.Workload], config=None,
+                 **legacy):
+        cfg = coerce_config("TileEvaluator", config, legacy,
+                            _EVALUATOR_LEGACY)
         keys = [(wl.arch, wl.shape) for wl in workloads]
         if len(set(keys)) != len(keys):
             raise ValueError(f"duplicate (arch, shape) workload keys: {keys}")
+        self.config = cfg
         self.workloads = list(workloads)
-        self.space = space
-        self.constraint = constraint if constraint is not None else dse.Constraint()
-        self.evaluator = evaluator
-        self.sim = sim
-        self.power_model = power_model
-        self.cycles_model = cycles_model
-        self.pipeline = bool(pipeline)
-        self.max_survivors = max(int(max_survivors), 1)
+        self.space = cfg.resolved_space
+        self.constraint = cfg.resolved_constraint
+        self.evaluator = cfg.evaluator
+        self.sim = cfg.sim
+        self.power_model = cfg.power_model
+        self.cycles_model = cfg.cycles_model
+        self.pipeline = bool(cfg.pipeline)
+        self.max_survivors = int(cfg.max_survivors)
+        self.fused_launches = 0
 
     @property
     def fused(self) -> bool:
@@ -357,6 +359,7 @@ class TileEvaluator:
                       ) -> costmodel.SweepReduced:
         """ONE fused launch: all workloads x one padded tile, skyline-reduced
         on device."""
+        self.fused_launches += 1
         arrays = self.padded_tile_arrays(batch)
         cons = self.constraint
         if self.evaluator == "pallas":
@@ -448,7 +451,11 @@ class TileEvaluator:
 class Campaign:
     """Streaming multi-workload DSE campaign over a ``SpaceSpec``.
 
-    ``evaluator`` selects the tile engine: ``"numpy"`` (float64 simulator,
+    Constructed from a ``CampaignConfig`` (``Campaign(workloads, config)``);
+    the pre-config keyword form ``Campaign(workloads, space,
+    evaluator=..., ...)`` still works but emits a ``DeprecationWarning``.
+
+    ``config.evaluator`` selects the tile engine: ``"numpy"`` (float64 simulator,
     bitwise-identical to one-shot ``pareto_search``), ``"jit"``
     (float32 fused multi-workload sweep, ``costmodel.sweep_workloads_
     reduced_jit``), ``"pallas"`` (the fused Pallas DSE-sweep kernel —
@@ -468,25 +475,21 @@ class Campaign:
     workers evaluated the tiles.
     """
 
-    def __init__(self, workloads: Sequence[dse.Workload], space: SpaceSpec,
-                 constraint: dse.Constraint = None,
-                 evaluator: str = "numpy",
-                 sim: costmodel.SimConfig = costmodel.SimConfig(),
-                 power_model=None, cycles_model=None,
-                 checkpoint_every: int = 1,
-                 pipeline: bool = True,
-                 max_survivors: int = 2048):
-        self.engine = TileEvaluator(
-            workloads, space, constraint=constraint, evaluator=evaluator,
-            sim=sim, power_model=power_model, cycles_model=cycles_model,
-            pipeline=pipeline, max_survivors=max_survivors)
-        self.checkpoint_every = max(int(checkpoint_every), 1)
+    def __init__(self, workloads: Sequence[dse.Workload], config=None,
+                 **legacy):
+        cfg = coerce_config("Campaign", config, legacy, _CAMPAIGN_LEGACY)
+        self.engine = TileEvaluator(workloads, cfg)
+        self.checkpoint_every = int(cfg.checkpoint_every)
         self.frontiers: Dict[WorkloadKey, StreamingFrontier] = {
             k: StreamingFrontier() for k in self.engine.workload_keys}
         self.tile_stats: List[TileStat] = []
         self.next_tile = 0
 
     # -- config views (the engine owns the config; Campaign owns the state) -
+
+    @property
+    def config(self) -> CampaignConfig:
+        return self.engine.config
 
     @property
     def workloads(self) -> List[dse.Workload]:
@@ -529,10 +532,12 @@ class Campaign:
     # -- construction -------------------------------------------------------
 
     @classmethod
-    def from_artifacts(cls, art_dir: str, space: SpaceSpec,
+    def from_artifacts(cls, art_dir: str, config=None,
                        **kwargs) -> "Campaign":
         """Sweep ALL cached dry-run workloads under ``art_dir``.
 
+        ``config`` is a ``CampaignConfig`` (or, deprecated, a ``SpaceSpec``
+        plus the old keyword set — forwarded to the constructor shim).
         Each artifact's compiled census (``base_analysis``) is loaded ONCE
         per (arch, shape) cell and reused across every tile of the sweep.
         Colliding (arch, shape) cells from different pods are disambiguated
@@ -552,7 +557,7 @@ class Campaign:
                                 "wire_bytes")},
                 base_chips=art["roofline"]["n_chips"],
                 state_gb_per_device=art["memory"]["state_gb_per_device"])
-        return cls(list(seen.values()), space, **kwargs)
+        return cls(list(seen.values()), config, **kwargs)
 
     @classmethod
     def from_checkpoint(cls, path: str, **kwargs) -> "Campaign":
@@ -560,7 +565,9 @@ class Campaign:
         next ``run`` continues at the first unevaluated tile.
 
         Space, workloads, constraint, ``SimConfig``, evaluator and pipeline
-        mode are all restored from the checkpoint.  Fitted predictor models
+        mode are all restored from the checkpoint into a ``CampaignConfig``;
+        extra keyword arguments override config fields on the rebuilt
+        config.  Fitted predictor models
         cannot be serialized, so resuming an ``evaluator="fast"`` campaign
         requires re-passing the SAME ``power_model``/``cycles_model`` via
         kwargs (``__init__`` refuses to resume without them); supplying
@@ -583,18 +590,30 @@ class Campaign:
                 f"checkpoint {path} was written under cost-model version "
                 f"{ckpt_model!r} but this build is "
                 f"{costmodel.SIM_MODEL_VERSION}; resuming would splice two "
-                "incomparable cost models into one frontier — re-run the "
-                "campaign from scratch")
+                "incomparable cost models into one frontier.  To upgrade, "
+                "re-run the campaign from scratch under the current model "
+                "(and rebuild any FrontierIndex derived from this "
+                "checkpoint)")
         workloads = [workload_from_dict(w) for w in state["workloads"]]
-        cons = dse.Constraint(**state["constraint"])
-        kwargs.setdefault("sim", costmodel.SimConfig(**state["sim"]))
-        # checkpoints written before the fused pipeline carry no key: they
-        # ran the legacy per-workload engine, so resume must stay on it —
-        # splicing the fused float32 sweep into a half-done legacy "jit"
-        # campaign could flip float32 near-ties mid-frontier
-        kwargs.setdefault("pipeline", state.get("pipeline", False))
-        camp = cls(workloads, SpaceSpec.from_dict(state["space"]),
-                   constraint=cons, evaluator=state["evaluator"], **kwargs)
+        cfg = CampaignConfig(
+            space=SpaceSpec.from_dict(state["space"]),
+            evaluator=state["evaluator"],
+            constraint=dse.Constraint(**state["constraint"]),
+            sim=costmodel.SimConfig(**state["sim"]),
+            # checkpoints written before the fused pipeline carry no key:
+            # they ran the legacy per-workload engine, so resume must stay
+            # on it — splicing the fused float32 sweep into a half-done
+            # legacy "jit" campaign could flip float32 near-ties
+            # mid-frontier
+            pipeline=state.get("pipeline", False))
+        if kwargs:
+            unknown = set(kwargs) - {f.name for f in
+                                     dataclasses.fields(CampaignConfig)}
+            if unknown:
+                raise TypeError(f"from_checkpoint: unexpected keyword "
+                                f"arguments {sorted(unknown)}")
+            cfg = cfg.replace(**kwargs)
+        camp = cls(workloads, cfg)
         camp.next_tile = state["next_tile"]
         camp.tile_stats = [TileStat(**s) for s in state["tile_stats"]]
         for key_str, fr_state in state["frontiers"].items():
@@ -626,8 +645,11 @@ class Campaign:
             max_tiles: Optional[int] = None) -> CampaignResult:
         """Sweep tiles from ``next_tile`` on; returns the (possibly partial)
         campaign result.  ``max_tiles`` bounds THIS call (interruption point
-        for resume demos/tests); with a ``checkpoint_path`` the state is
-        persisted every ``checkpoint_every`` tiles and at the end."""
+        for resume demos/tests); with a ``checkpoint_path`` (defaulting to
+        ``config.checkpoint_path``) the state is persisted every
+        ``checkpoint_every`` tiles and at the end."""
+        if checkpoint_path is None:
+            checkpoint_path = self.config.checkpoint_path
         t_start = time.perf_counter()
         done_this_call = 0
         fused = self.fused

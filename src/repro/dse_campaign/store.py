@@ -29,20 +29,34 @@ from repro.dse_campaign.frontier import candidate_to_dict
 CAMPAIGN_BENCH_NAME = "BENCH_dse_campaign.json"
 
 
-def _atomic_write_json(payload: Dict, path: str) -> str:
+def atomic_write_json(payload: Dict, path: str) -> str:
+    """Write ``payload`` as JSON via tmp-file + ``os.replace``.
+
+    The temp file is flushed and fsync'd before the rename: ``os.replace``
+    is atomic in the namespace but says nothing about data durability, so
+    without the fsync a crash after the rename could leave a
+    truncated-but-named checkpoint — exactly the corruption the fabric's
+    resume path assumes cannot happen.
+    """
     d = os.path.dirname(path)
     if d:
         os.makedirs(d, exist_ok=True)
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump(payload, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)
     return path
 
 
+# pre-PR-7 private name, kept for any out-of-tree callers
+_atomic_write_json = atomic_write_json
+
+
 def save_checkpoint(state: Dict, path: str) -> str:
-    """Persist a ``Campaign.state_dict()`` atomically (tmp + rename)."""
-    return _atomic_write_json(state, path)
+    """Persist a ``Campaign.state_dict()`` atomically (tmp + fsync + rename)."""
+    return atomic_write_json(state, path)
 
 
 def load_checkpoint(path: str) -> Dict:
@@ -103,4 +117,4 @@ def save_campaign(result, space_dict: Dict, constraint: Dict, evaluator: str,
     """Write the campaign report JSON; returns the path."""
     payload = campaign_payload(result, space_dict, constraint, evaluator,
                                seed=seed)
-    return _atomic_write_json(payload, os.path.join(out_dir, fname))
+    return atomic_write_json(payload, os.path.join(out_dir, fname))

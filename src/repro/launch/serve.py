@@ -1,22 +1,42 @@
-"""Serving driver: batched requests through the continuous-batching engine.
+"""Serving driver: token generation, selection queries, or index builds.
 
-  python -m repro.launch.serve --arch stablelm-1.6b --requests 8 --slots 4
+Three modes (``--mode``, default ``token`` for back-compat):
+
+  token        batched requests through the continuous-batching engine
+               python -m repro.launch.serve --arch stablelm-1.6b --requests 8
+
+  build-index  campaign checkpoint -> FrontierIndex artifact
+               python -m repro.launch.serve --mode build-index \
+                   --checkpoint experiments/campaign.ckpt.json \
+                   --out experiments/frontier_index.json
+
+  select       answer selection queries against a FrontierIndex
+               python -m repro.launch.serve --mode select \
+                   --index experiments/frontier_index.json \
+                   [--queries queries.json]
+               The queries file is a JSON list of
+               ``{"workload": {...workload_to_dict...},
+                  "constraint": {...} | absent, "deadline_s": float | absent}``;
+               without it, every indexed family is queried as a self-check
+               (all answers must come back ``index_exact``).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 
-import jax
 import numpy as np
-
-from repro.configs.base import get_config
-from repro.models import api
-from repro.serving.engine import Request, ServingEngine
 
 
 def serve(arch: str, n_requests: int = 8, slots: int = 4, max_len: int = 128,
           prompt_len: int = 8, max_new: int = 16, seed: int = 0):
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.models import api
+    from repro.serving.engine import Request, ServingEngine
+
     cfg = get_config(arch).reduced()
     model = api.build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed), max_seq=max_len)
@@ -38,14 +58,84 @@ def serve(arch: str, n_requests: int = 8, slots: int = 4, max_len: int = 128,
     return reqs, stats
 
 
+def build_index(checkpoint: str, out: str) -> str:
+    """Campaign checkpoint -> saved FrontierIndex; returns the path."""
+    from repro.serving.frontier_index import FrontierIndex
+
+    index = FrontierIndex.from_checkpoint(checkpoint)
+    path = index.save(out)
+    print(f"[serve] indexed {len(index)} workload families -> {path}")
+    return path
+
+
+def select_queries(index_path: str, queries_path: str = None):
+    """Answer a batch of selection queries; returns the answers.
+
+    All queries are submitted before one ``flush`` — the CLI batch IS the
+    batching window, so concurrent novel queries share one fused sweep.
+    """
+    from repro.core import dse
+    from repro.dse_campaign.runner import workload_from_dict
+    from repro.serving.engine import SelectionEngine
+    from repro.serving.frontier_index import FrontierIndex
+
+    index = FrontierIndex.load(index_path)
+    engine = SelectionEngine(index)
+    if queries_path:
+        with open(queries_path) as f:
+            queries = json.load(f)
+        for qd in queries:
+            engine.submit(
+                workload_from_dict(qd["workload"]),
+                constraint=(dse.Constraint(**qd["constraint"])
+                            if qd.get("constraint") else None),
+                deadline_s=qd.get("deadline_s"))
+    else:
+        for entry in index.entries:           # self-check: all index hits
+            engine.submit(entry.workload)
+    answers = engine.flush()
+    for a in answers:
+        top = a.choices[0] if a.choices else None
+        pick = (f"{top.candidate.chip} x{top.candidate.n_chips} "
+                f"@ {top.candidate.freq_mhz:.0f} MHz, "
+                f"{top.energy_j:.3e} J / {top.latency_s:.3e} s"
+                if top else "no feasible candidate")
+        print(f"[serve] q{a.qid} {a.workload.arch}|{a.workload.shape} "
+              f"[{a.provenance}] {pick} ({a.wall_s * 1e3:.1f} ms)")
+    print(f"[serve] {engine.stats['queries']} queries: "
+          + ", ".join(f"{p}={engine.stats[p]}"
+                      for p in ("index_exact", "mini_campaign",
+                                "predictor_only"))
+          + f"; fused launches: {engine.fused_launches}")
+    return answers
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--mode", choices=("token", "select", "build-index"),
+                    default="token")
+    ap.add_argument("--arch", help="token mode: model architecture")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--checkpoint", help="build-index: campaign checkpoint")
+    ap.add_argument("--out", help="build-index: output index path")
+    ap.add_argument("--index", help="select: FrontierIndex artifact")
+    ap.add_argument("--queries", help="select: JSON query batch (optional)")
     args = ap.parse_args()
+    if args.mode == "build-index":
+        if not (args.checkpoint and args.out):
+            ap.error("--mode build-index needs --checkpoint and --out")
+        build_index(args.checkpoint, args.out)
+        return
+    if args.mode == "select":
+        if not args.index:
+            ap.error("--mode select needs --index")
+        select_queries(args.index, args.queries)
+        return
+    if not args.arch:
+        ap.error("--mode token needs --arch")
     reqs, stats = serve(args.arch, n_requests=args.requests, slots=args.slots,
                         max_len=args.max_len, max_new=args.max_new)
     print(f"[serve] {stats['completed']}/{len(reqs)} done, "

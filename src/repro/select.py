@@ -1,0 +1,33 @@
+"""The accelerator-selection facade: ``repro.select``.
+
+The documented import surface for serving selection queries — everything a
+client needs to build, persist, load and query a selection service:
+
+    from repro import select
+
+    index = select.FrontierIndex.from_checkpoint("campaign.ckpt.json")
+    index.save("frontier_index.json")
+
+    engine = select.SelectionEngine(select.FrontierIndex.load(
+        "frontier_index.json"))
+    answer = engine.select(workload)          # -> SelectionAnswer
+    answer.provenance                         # one of select.PROVENANCES
+    answer.choices[0].candidate               # best accelerator config
+
+The implementation lives in ``repro.serving`` (the engine) and
+``repro.dse_campaign`` (the campaign stack the index is built from); this
+module only re-exports the stable names.  See ``docs/serving.md`` for the
+query flow and the index build/refresh runbook.
+"""
+
+from repro.dse_campaign.config import CampaignConfig
+from repro.serving.engine import (PROVENANCES, RankedChoice, SelectionAnswer,
+                                  SelectionEngine, SelectionQuery)
+from repro.serving.frontier_index import (INDEX_SCHEMA_VERSION, FrontierIndex,
+                                          IndexEntry, family_key)
+
+__all__ = [
+    "CampaignConfig", "FrontierIndex", "INDEX_SCHEMA_VERSION", "IndexEntry",
+    "PROVENANCES", "RankedChoice", "SelectionAnswer", "SelectionEngine",
+    "SelectionQuery", "family_key",
+]

@@ -1,0 +1,13 @@
+"""Serving layer: the token-serving engine and the accelerator-selection
+query engine.  ``repro.select`` is the documented facade for the selection
+surface; import from there unless you need the internals."""
+
+from repro.serving.engine import (PROVENANCES, Request, SelectionAnswer,
+                                  SelectionEngine, SelectionQuery,
+                                  ServingEngine)
+from repro.serving.frontier_index import FrontierIndex, IndexEntry
+
+__all__ = [
+    "FrontierIndex", "IndexEntry", "PROVENANCES", "Request",
+    "SelectionAnswer", "SelectionEngine", "SelectionQuery", "ServingEngine",
+]

@@ -1,20 +1,35 @@
-"""Serving engine: KV-cache manager + continuous batcher.
+"""Serving engines: token generation and accelerator selection.
 
-Slot-based continuous batching (vLLM-style, TPU-static shapes): the decode
-step always runs the full [slots, 1] batch; free slots carry a pad token and
-are masked out.  Prefill fills one request's cache region; finished requests
-free their slot immediately for the next queued request.
+Two independent engines live here:
 
-The MLA compressed cache (c_kv + k_rope) comes straight from the model's
-init_cache — 57x smaller per token than GQA full heads for DeepSeek-V3,
-which is why decode batches of 128 x 32k fit (EXPERIMENTS.md §Roofline).
+* ``ServingEngine`` — KV-cache manager + continuous batcher for token
+  serving.  Slot-based continuous batching (vLLM-style, TPU-static
+  shapes): the decode step always runs the full [slots, 1] batch; free
+  slots carry a pad token and are masked out.  Prefill fills one request's
+  cache region; finished requests free their slot immediately for the next
+  queued request.  The MLA compressed cache (c_kv + k_rope) comes straight
+  from the model's init_cache — 57x smaller per token than GQA full heads
+  for DeepSeek-V3, which is why decode batches of 128 x 32k fit
+  (EXPERIMENTS.md §Roofline).
+
+* ``SelectionEngine`` — the accelerator-selection query engine over a
+  ``FrontierIndex``: ``select(workload, constraint) -> ranked candidates``.
+  Known workload families are answered straight from the index (provenance
+  ``index_exact`` — identical to the offline campaign pick by
+  construction).  Novel workloads fall back to a mini-campaign: all novel
+  queries of a flush ride ONE fused multi-workload sweep launch (the
+  ``kernels/dse_sweep.py`` data axis is per-workload, so batching queries
+  is free), optionally predictor-pruned to a top slice that is then
+  verified exactly (provenance ``mini_campaign``).  A query whose deadline
+  the exact path cannot meet degrades to predictor-ranked answers without
+  any sweep (provenance ``predictor_only``).  See ``docs/serving.md``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -132,3 +147,409 @@ class ServingEngine:
         dt = time.perf_counter() - t0
         return {"decoded_tokens": decoded, "wall_s": dt,
                 "tok_per_s": decoded / dt if dt > 0 else 0.0}
+
+
+# ---------------------------------------------------------------------------
+# accelerator selection
+# ---------------------------------------------------------------------------
+
+from repro.configs.base import SHAPES, get_config          # noqa: E402
+from repro.core import dse as _dse                          # noqa: E402
+from repro.dse_campaign.config import CampaignConfig        # noqa: E402
+from repro.dse_campaign.frontier import StreamingFrontier   # noqa: E402
+from repro.dse_campaign.runner import TileEvaluator         # noqa: E402
+from repro.dse_campaign.space import SpaceSpec              # noqa: E402
+from repro.serving.frontier_index import FrontierIndex, IndexEntry  # noqa: E402
+from repro.core import costmodel as _costmodel              # noqa: E402
+
+# answer provenance, stamped on every SelectionAnswer:
+#   index_exact    — served from the FrontierIndex; identical to the offline
+#                    campaign pick by construction
+#   mini_campaign  — novel workload, answered by a fused exact sweep (all
+#                    concurrent novel queries share ONE launch)
+#   predictor_only — deadline degradation: predictor-ranked, no exact sweep
+PROVENANCES = ("index_exact", "mini_campaign", "predictor_only")
+
+
+@dataclasses.dataclass
+class SelectionQuery:
+    """One pending selection request.
+
+    ``constraint=None`` means "the index's constraint" (the only constraint
+    index entries were computed under); an explicit different constraint
+    forces the mini-campaign path even for known families.  ``deadline_s``
+    is a budget from submission time: if the exact path cannot meet it
+    (and predictors are configured), the answer degrades to
+    ``predictor_only``.
+    """
+
+    workload: _dse.Workload
+    constraint: Optional[_dse.Constraint] = None
+    deadline_s: Optional[float] = None
+    qid: int = -1
+    submitted_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RankedChoice:
+    """One ranked accelerator recommendation.  ``index`` is the candidate's
+    global position in the serving space; ``exact`` is False only for
+    predictor-scored (unverified) choices."""
+
+    candidate: _dse.Candidate
+    energy_j: float
+    latency_s: float
+    index: int
+    exact: bool = True
+
+
+@dataclasses.dataclass
+class SelectionAnswer:
+    """The engine's answer to one query: the top-k ranked choices plus the
+    full frontier it ranked from (for parity checks and richer clients).
+
+    ``verified_gidx`` is the global-index slice the fallback sweep verified
+    exactly (``None`` for index hits and predictor-only answers) — a
+    standalone mini-campaign on the same slice reproduces ``frontier()``
+    bitwise.
+    """
+
+    qid: int
+    workload: _dse.Workload
+    provenance: str
+    choices: List[RankedChoice]
+    feasible_count: int
+    wall_s: float
+    frontier_candidates: Tuple[_dse.Candidate, ...]
+    frontier_energy_j: np.ndarray
+    frontier_latency_s: np.ndarray
+    frontier_indices: np.ndarray
+    verified_gidx: Optional[np.ndarray] = None
+
+    def frontier(self) -> _dse.ParetoFrontier:
+        """The answer's frontier in ``dse.ParetoFrontier`` form (exact for
+        ``index_exact`` / ``mini_campaign``; predicted for
+        ``predictor_only``)."""
+        return _dse.ParetoFrontier(
+            workload=self.workload,
+            candidates=tuple(self.frontier_candidates),
+            energy_j=np.asarray(self.frontier_energy_j, np.float64),
+            latency_s=np.asarray(self.frontier_latency_s, np.float64),
+            indices=np.asarray(self.frontier_indices, np.int64),
+            feasible_count=int(self.feasible_count))
+
+
+class SelectionEngine:
+    """Accelerator-selection query engine over a ``FrontierIndex``.
+
+    Constructed like every other campaign entry point — from a
+    ``CampaignConfig``.  ``config=None`` derives one from the index itself
+    (same space, constraint and ``SimConfig`` the offline campaign used;
+    the evaluator is coerced to a fused tier, since the fallback path's
+    one-launch batching property only exists on the fused sweep).  The
+    ``power_model`` / ``cycles_model`` config fields enable the predictor
+    paths (top-slice pruning and deadline degradation); without them every
+    novel query is answered by a full exact sweep and deadlines are
+    advisory.
+
+    Request layer: ``submit()`` queues queries, ``flush()`` answers the
+    whole batch — the batching window is the caller's submit..flush span
+    (``select()`` is the submit+flush one-liner).  All novel queries of a
+    flush that share a constraint ride ONE fused multi-workload sweep
+    launch; ``fused_launches`` counts launches across the engine's lifetime
+    so the claim is measured, not assumed.  Per-row results of the fused
+    sweep are lane-local, so batched answers are bitwise identical to
+    sequential ones.
+    """
+
+    def __init__(self, index: FrontierIndex, config: CampaignConfig = None,
+                 top_k: int = 5, match_rtol: float = 1e-9,
+                 verify_top: int = 256):
+        if config is None:
+            config = self._config_from_index(index)
+        elif not isinstance(config, CampaignConfig):
+            raise TypeError("SelectionEngine: config must be a "
+                            "CampaignConfig (or None to derive one from "
+                            "the index)")
+        self.index = index
+        self.config = config
+        self.space = config.resolved_space
+        self.top_k = int(top_k)
+        self.match_rtol = float(match_rtol)
+        self.verify_top = int(verify_top)
+        self.index_constraint = _dse.Constraint(**index.constraint_dict)
+        self.pending: List[SelectionQuery] = []
+        self.fused_launches = 0
+        self.stats: Dict[str, int] = {p: 0 for p in PROVENANCES}
+        self.stats["queries"] = 0
+        self._next_qid = 0
+        self._exact_ema_s: Optional[float] = None
+        self._full_batch: Optional[_dse.CandidateBatch] = None
+
+    @staticmethod
+    def _config_from_index(index: FrontierIndex) -> CampaignConfig:
+        evaluator = (index.evaluator
+                     if index.evaluator in ("jit", "pallas") else "jit")
+        return CampaignConfig(
+            space=SpaceSpec.from_dict(index.space_dict),
+            evaluator=evaluator,
+            constraint=_dse.Constraint(**index.constraint_dict),
+            sim=_costmodel.SimConfig(**index.sim_dict))
+
+    @property
+    def _has_models(self) -> bool:
+        return (self.config.power_model is not None
+                and self.config.cycles_model is not None)
+
+    # -- request layer ------------------------------------------------------
+
+    def submit(self, workload: _dse.Workload,
+               constraint: Optional[_dse.Constraint] = None,
+               deadline_s: Optional[float] = None) -> int:
+        """Queue a query for the next ``flush``; returns its qid."""
+        qid = self._next_qid
+        self._next_qid += 1
+        self.pending.append(SelectionQuery(
+            workload=workload, constraint=constraint, deadline_s=deadline_s,
+            qid=qid, submitted_s=time.perf_counter()))
+        return qid
+
+    def select(self, workload: _dse.Workload,
+               constraint: Optional[_dse.Constraint] = None,
+               deadline_s: Optional[float] = None) -> SelectionAnswer:
+        """Answer one query now (a batching window of one)."""
+        self.submit(workload, constraint, deadline_s)
+        return self.flush()[-1]
+
+    def flush(self) -> List[SelectionAnswer]:
+        """Answer every pending query, in submission order.
+
+        Index-eligible queries (known family, index constraint) are served
+        from the index; the rest are triaged by deadline and the survivors
+        grouped by constraint — each group is ONE fused sweep launch.
+        """
+        queries, self.pending = self.pending, []
+        answers: Dict[int, SelectionAnswer] = {}
+        novel: List[SelectionQuery] = []
+        for q in queries:
+            t0 = time.perf_counter()
+            entry = (self.index.lookup(q.workload, self.match_rtol)
+                     if self._index_eligible(q) else None)
+            if entry is not None:
+                answers[q.qid] = self._answer_from_entry(
+                    q, entry, time.perf_counter() - t0)
+            else:
+                novel.append(q)
+        exact: List[SelectionQuery] = []
+        for q in novel:
+            if self._must_degrade(q):
+                answers[q.qid] = self._answer_predictor_only(q)
+            else:
+                exact.append(q)
+        groups: Dict[Tuple, List[SelectionQuery]] = {}
+        for q in exact:
+            groups.setdefault(
+                dataclasses.astuple(self._query_constraint(q)),
+                []).append(q)
+        for group in groups.values():
+            t0 = time.perf_counter()
+            fronts, gidx = self._mini_campaign(
+                [q.workload for q in group], self._query_constraint(group[0]))
+            dt = time.perf_counter() - t0
+            self._exact_ema_s = (dt if self._exact_ema_s is None
+                                 else 0.5 * (self._exact_ema_s + dt))
+            for q, front in zip(group, fronts):
+                answers[q.qid] = self._answer_from_frontier(
+                    q, front, "mini_campaign", dt / len(group),
+                    verified_gidx=gidx)
+        for q in queries:
+            self.stats["queries"] += 1
+            self.stats[answers[q.qid].provenance] += 1
+        return [answers[q.qid] for q in queries]
+
+    # -- the three answer paths ---------------------------------------------
+
+    def _index_eligible(self, q: SelectionQuery) -> bool:
+        return q.constraint is None or q.constraint == self.index_constraint
+
+    def _query_constraint(self, q: SelectionQuery) -> _dse.Constraint:
+        return (q.constraint if q.constraint is not None
+                else self.index_constraint)
+
+    def _must_degrade(self, q: SelectionQuery) -> bool:
+        """Whether ``q``'s deadline forces the predictor-only answer.
+
+        Degradation needs predictors; without them the exact sweep is the
+        only possible answer and the deadline is advisory.  The exact
+        path's cost estimate is an EMA of past group sweeps — before any
+        sweep has run, only an already-expired deadline degrades.
+        """
+        if not self._has_models or q.deadline_s is None:
+            return False
+        remaining = q.deadline_s - (time.perf_counter() - q.submitted_s)
+        if remaining <= 0:
+            return True
+        return self._exact_ema_s is not None and remaining < self._exact_ema_s
+
+    def _ranked(self, candidates: Sequence[_dse.Candidate], energy_j,
+                latency_s, indices, exact: bool) -> List[RankedChoice]:
+        """Top-k by (energy, latency, index) ascending — the one ranking
+        rule all three provenances share."""
+        e = np.asarray(energy_j, np.float64)
+        l = np.asarray(latency_s, np.float64)
+        i = np.asarray(indices, np.int64)
+        order = np.lexsort((i, l, e))[:self.top_k]
+        return [RankedChoice(candidate=candidates[j], energy_j=float(e[j]),
+                             latency_s=float(l[j]), index=int(i[j]),
+                             exact=exact) for j in order]
+
+    def _answer_from_entry(self, q: SelectionQuery, entry: IndexEntry,
+                           wall_s: float) -> SelectionAnswer:
+        return SelectionAnswer(
+            qid=q.qid, workload=q.workload, provenance="index_exact",
+            choices=self._ranked(entry.candidates, entry.energy_j,
+                                 entry.latency_s, entry.indices, exact=True),
+            feasible_count=entry.feasible_count, wall_s=wall_s,
+            frontier_candidates=tuple(entry.candidates),
+            frontier_energy_j=entry.energy_j.copy(),
+            frontier_latency_s=entry.latency_s.copy(),
+            frontier_indices=entry.indices.copy())
+
+    def _answer_from_frontier(self, q: SelectionQuery,
+                              front: _dse.ParetoFrontier, provenance: str,
+                              wall_s: float,
+                              verified_gidx: Optional[np.ndarray] = None,
+                              exact: bool = True) -> SelectionAnswer:
+        return SelectionAnswer(
+            qid=q.qid, workload=q.workload, provenance=provenance,
+            choices=self._ranked(front.candidates, front.energy_j,
+                                 front.latency_s, front.indices, exact=exact),
+            feasible_count=int(front.feasible_count), wall_s=wall_s,
+            frontier_candidates=tuple(front.candidates),
+            frontier_energy_j=np.asarray(front.energy_j, np.float64),
+            frontier_latency_s=np.asarray(front.latency_s, np.float64),
+            frontier_indices=np.asarray(front.indices, np.int64),
+            verified_gidx=verified_gidx)
+
+    # -- predictor paths ----------------------------------------------------
+
+    def _full_space_batch(self) -> _dse.CandidateBatch:
+        """The whole serving space as one materialized batch (cached) —
+        what the predictor paths score over."""
+        if self._full_batch is None:
+            self._full_batch = self.space.slice(0, len(self.space),
+                                                with_candidates=True)
+        return self._full_batch
+
+    def _predict(self, wl: _dse.Workload, constraint: _dse.Constraint):
+        """Predictor scores over the full space for one workload.
+
+        Predictors score static (arch config x candidate) features, so a
+        workload's census perturbations do not move its predictions — fine
+        for ranking a top slice, which is why the slice is always verified
+        exactly before being served as ``mini_campaign``.
+        """
+        cfg = get_config(wl.arch)
+        shape = SHAPES[wl.shape.split(":", 1)[0]]
+        energy, latency, feasible, _, _ = _dse.predict_space(
+            cfg, shape, self.config.power_model, self.config.cycles_model,
+            self._full_space_batch(), constraint)
+        return energy, latency, feasible
+
+    def _answer_predictor_only(self, q: SelectionQuery) -> SelectionAnswer:
+        t0 = time.perf_counter()
+        constraint = self._query_constraint(q)
+        energy, latency, feasible = self._predict(q.workload, constraint)
+        mask = _dse.pareto_mask(energy, latency, feasible)
+        loc = np.flatnonzero(mask)
+        batch = self._full_space_batch()
+        front = _dse.ParetoFrontier(
+            workload=q.workload,
+            candidates=tuple(batch.candidates[i] for i in loc),
+            energy_j=np.asarray(energy, np.float64)[loc],
+            latency_s=np.asarray(latency, np.float64)[loc],
+            indices=loc.astype(np.int64),
+            feasible_count=int(np.asarray(feasible, bool).sum()))
+        return self._answer_from_frontier(
+            q, front, "predictor_only", time.perf_counter() - t0,
+            exact=False)
+
+    def _candidate_slice(self, workloads: Sequence[_dse.Workload],
+                         constraint: _dse.Constraint) -> np.ndarray:
+        """Global indices the fallback sweep verifies exactly: the whole
+        space without predictors, else the union over workloads of each
+        predictor's top slice (predicted-feasible best-energy and
+        best-latency ``verify_top`` plus the predicted Pareto members)."""
+        n = len(self.space)
+        if not self._has_models or self.verify_top >= n:
+            return np.arange(n, dtype=np.int64)
+        union: List[np.ndarray] = []
+        for wl in workloads:
+            energy, latency, feasible = self._predict(wl, constraint)
+            feas = np.flatnonzero(np.asarray(feasible, bool))
+            if not feas.size:
+                continue
+            by_e = feas[np.argsort(energy[feas], kind="stable")]
+            by_l = feas[np.argsort(latency[feas], kind="stable")]
+            union.append(by_e[:self.verify_top])
+            union.append(by_l[:self.verify_top])
+            union.append(np.flatnonzero(
+                _dse.pareto_mask(energy, latency, feasible)))
+        if not union:
+            return np.arange(n, dtype=np.int64)   # conservative fallback
+        return np.unique(np.concatenate(union)).astype(np.int64)
+
+    # -- the exact fallback sweep -------------------------------------------
+
+    def _mini_campaign(self, workloads: Sequence[_dse.Workload],
+                       constraint: _dse.Constraint
+                       ) -> Tuple[List[_dse.ParetoFrontier], np.ndarray]:
+        """Exact frontiers for ``workloads`` on the verified slice — ONE
+        fused multi-workload launch for the whole group.
+
+        Workload keys are tagged per query position (the fused sweep reads
+        only the census columns, and predictor shape resolution strips the
+        tag like pod tags), so concurrent queries on the same (arch, shape)
+        with different censuses cannot collide.  Frontier indices are
+        remapped to global space indices; on the full-space slice the
+        result is bitwise identical to ``Campaign.run`` on the same config
+        (tile-boundary invariance), which is what the parity tests pin.
+        """
+        tagged = [dse_workload_tagged(wl, i) for i, wl in enumerate(workloads)]
+        cfg = self.config.replace(constraint=constraint)
+        ev = TileEvaluator(tagged, cfg)
+        gidx = self._candidate_slice(workloads, constraint)
+        if gidx.size == len(self.space):
+            batch = self._full_space_batch()
+        else:
+            batch = _dse.CandidateBatch.from_candidates(
+                self.space.candidates_at(gidx))
+        tr = ev.reduce_tile(batch, 0)
+        self.fused_launches += ev.fused_launches
+        fronts: List[_dse.ParetoFrontier] = []
+        for wi, wl in enumerate(workloads):
+            loc = tr.surv_gidx[wi]                 # local slice positions
+            fr = StreamingFrontier()
+            fr.merge_reduced(
+                self.space.candidates_at(gidx[loc]), tr.surv_energy[wi],
+                tr.surv_latency[wi], loc, span=(0, int(gidx.size)),
+                n_feasible=tr.n_feasible[wi],
+                ref_energy_j=tr.ref_energy_j[wi],
+                ref_latency_s=tr.ref_latency_s[wi], tile=0)
+            front = fr.as_pareto_frontier(wl)
+            fronts.append(_dse.ParetoFrontier(
+                workload=wl, candidates=front.candidates,
+                energy_j=front.energy_j, latency_s=front.latency_s,
+                indices=gidx[front.indices],
+                feasible_count=front.feasible_count))
+        return fronts, gidx
+
+
+def dse_workload_tagged(wl: _dse.Workload, i: int) -> _dse.Workload:
+    """``wl`` with its shape tagged by query position — unique (arch, shape)
+    keys inside one fused group sweep (same mechanism as pod-tag
+    disambiguation in ``Campaign.from_artifacts``)."""
+    return _dse.Workload(arch=wl.arch, shape=f"{wl.shape}:q{i}",
+                         base_analysis=dict(wl.base_analysis),
+                         base_chips=wl.base_chips,
+                         state_gb_per_device=wl.state_gb_per_device)

@@ -314,7 +314,7 @@ def test_campaign_resume_restores_sim_config(tmp_path):
     resumed frontier would silently mix two different simulators."""
     from repro.core import costmodel
     spec = small_spec(chunk_size=48)
-    sim = costmodel.SimConfig(overlap=1.0, links_used=4)
+    sim = costmodel.SimConfig(overlap=1.0, coll_model_frac=0.25)
     ckpt = str(tmp_path / "ckpt.json")
     camp = Campaign(ART_WORKLOADS[:1], spec, sim=sim)
     camp.run(checkpoint_path=ckpt, max_tiles=1)

@@ -1,7 +1,8 @@
 """Topology-aware collective model tests: per-axis link/wraparound/hop
 semantics, factorization signal (same-count meshes -> distinct t_collective),
 scalar/batch/jit parity across tile sizes, pod-axis plumbing, and the
-deprecated ``links_used`` fallback shim."""
+removed ``links_used`` knob (fixed mesh-less approximation + checkpoint
+upgrade error)."""
 
 import itertools
 import warnings
@@ -15,7 +16,8 @@ except ImportError:  # pragma: no cover - exercised on bare installs
     from _hypothesis_stub import given, settings, st
 
 from repro.core import costmodel, dse
-from repro.dse_campaign import SpaceSpec, StreamingFrontier, frontiers_identical
+from repro.dse_campaign import (CampaignConfig, SpaceSpec, StreamingFrontier,
+                                frontiers_identical)
 from repro.hw import (CHIPS, axis_link_counts, get_chip, mesh_factorizations,
                       normalize_mesh, topology_for)
 
@@ -229,45 +231,57 @@ def test_campaign_frontier_contains_mesh_differentiated_points():
         seen[key] = c.mesh
 
 
-# --- deprecated links_used shim -----------------------------------------------
+# --- removed links_used knob (SIM_MODEL_VERSION 3) ----------------------------
 
 
-def test_links_used_deprecation_warning():
-    with pytest.warns(DeprecationWarning, match="links_used is deprecated"):
+def test_links_used_field_removed():
+    """The deprecated knob is gone for good: constructing a SimConfig with
+    it is a hard TypeError, not a warning."""
+    with pytest.raises(TypeError):
         costmodel.SimConfig(links_used=4)
     with warnings.catch_warnings():
-        warnings.simplefilter("error")           # default value stays silent
+        warnings.simplefilter("error")           # defaults stay silent
         costmodel.SimConfig()
 
 
-def test_links_used_still_drives_meshless_fallback():
-    """Old behaviour is preserved verbatim when no mesh is given: t_coll
-    scales with 1/links_used."""
+def test_meshless_fallback_is_fixed_approximation():
+    """Mesh-less simulation uses the fixed MESHLESS_LINKS approximation —
+    bitwise-identical to the old links_used default — and the topology path
+    is untouched by the removal."""
     ana = {"flops": 1e12, "hbm_bytes": 1e10, "wire_bytes": 4e11,
            "collective_bytes": 3e11}
     chip = get_chip("tpu-v5e")
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        s1 = costmodel.SimConfig(links_used=1)
-        s4 = costmodel.SimConfig(links_used=4)
-    r1 = costmodel.simulate(ana, chip, 16, sim=s1)
-    r4 = costmodel.simulate(ana, chip, 16, sim=s4)
-    assert r1.t_collective == 4e11 / chip.ici_bw
-    assert r4.t_collective == r1.t_collective / 4
-    # the topology path ignores the deprecated knob entirely
-    t1 = costmodel.simulate(ana, chip, 16, sim=s1, mesh=(4, 4))
-    t4 = costmodel.simulate(ana, chip, 16, sim=s4, mesh=(4, 4))
-    assert t1.t_collective == t4.t_collective
+    assert costmodel.MESHLESS_LINKS == 2
+    r = costmodel.simulate(ana, chip, 16)
+    assert r.t_collective == 4e11 / (chip.ici_bw * costmodel.MESHLESS_LINKS)
+    t = costmodel.simulate(ana, chip, 16, mesh=(4, 4))
+    assert t.t_collective != r.t_collective      # topology model, not fallback
 
 
-def test_old_checkpoint_sim_dict_still_loads():
-    """A pre-topology checkpoint's SimConfig payload (no coll_model_frac)
-    reconstructs, keeping old campaign checkpoints loadable."""
-    old = {"overlap": 0.8, "w_mxu": 0.55, "w_hbm": 0.30, "w_ici": 0.15,
-           "links_used": 2}
-    sim = costmodel.SimConfig(**old)
-    assert sim.coll_model_frac == costmodel.COLL_MODEL_FRAC
-    assert sim == costmodel.SimConfig()
+def test_links_used_checkpoint_gets_upgrade_error(tmp_path):
+    """A checkpoint whose sim dict still carries links_used was written
+    under cost-model version <= 2, so the version gate fires FIRST with the
+    explicit upgrade message — the stale sim key never reaches
+    SimConfig(**...)."""
+    import json
+
+    from repro.dse_campaign import Campaign
+    from repro.dse_campaign.space import SpaceSpec
+
+    spec = SpaceSpec(chips=("tpu-v5e",), chip_counts=(16,), freq_points=3,
+                     chunk_size=16)
+    camp = Campaign([WL], CampaignConfig(space=spec))
+    camp.run(max_tiles=1)
+    state = camp.state_dict()
+    state["sim_model_version"] = 2
+    state["sim"]["links_used"] = 2               # the v2 on-disk shape
+    path = tmp_path / "old.json"
+    path.write_text(json.dumps(state))
+    with pytest.raises(ValueError, match="re-run the campaign"):
+        Campaign.from_checkpoint(str(path))
+    # the raw dict itself no longer reconstructs — the knob is really gone
+    with pytest.raises(TypeError):
+        costmodel.SimConfig(**state["sim"])
 
 
 def test_cross_model_checkpoint_resume_refused(tmp_path):
