@@ -40,6 +40,7 @@ from repro.dse_campaign import (Campaign, CampaignConfig,
                                 frontiers_identical, tiny_campaign_space)
 from repro.serving.engine import SelectionEngine
 from repro.serving.frontier_index import FrontierIndex
+from repro.telemetry import Telemetry
 
 SERVING_BENCH_NAME = "BENCH_serving.json"
 INDEX_ARTIFACT_NAME = "frontier_index.json"
@@ -78,7 +79,10 @@ def run() -> list:
     index = FrontierIndex.load(index_path)
 
     # -- index-hit: identity on every cached cell + latency -----------------
-    engine = SelectionEngine(index)
+    # the main engine is fully instrumented: its per-path latency
+    # histograms / counters snapshot into the artifact under "telemetry"
+    tel = Telemetry()
+    engine = SelectionEngine(index, telemetry=tel)
     hit_lat, identity = [], {}
     for wl in campaign.workloads:
         key = (wl.arch, wl.shape)
@@ -129,8 +133,9 @@ def run() -> list:
     X, y_power, y_cycles, _ = dataset.build_dataset(ART_DIR)
     rf = predictors.RandomForestRegressor().fit(X, y_power)
     knn = predictors.KNNRegressor().fit(X, y_cycles)
+    deg_tel = Telemetry()
     deg_engine = SelectionEngine(index, SelectionEngine._config_from_index(
-        index).replace(power_model=rf, cycles_model=knn))
+        index).replace(power_model=rf, cycles_model=knn), telemetry=deg_tel)
     deg_lat, deg_prov = [], []
     for i in range(HIT_REPEATS):
         q = _perturb(novel[i % len(novel)], 1.0 + 2e-4 * (i + 1))
@@ -168,6 +173,11 @@ def run() -> list:
             "provenance": [a.provenance for a in batched],
         },
         "stats": dict(engine.stats),
+        # engine-measured observability: per-path selection_latency_s
+        # histograms, selection_queries_total counters, the deadline-EMA
+        # gauge (main engine) and the degraded engine's counterpart
+        "telemetry": {"engine_metrics": tel.snapshot(),
+                      "degraded_engine_metrics": deg_tel.snapshot()},
     }
     path = os.path.join(OUT_DIR, SERVING_BENCH_NAME)
     with open(path, "w") as f:

@@ -61,6 +61,7 @@ from repro.dse_campaign.runner import (Campaign, CampaignResult, TileEvaluator,
                                        workload_from_dict, workload_to_dict)
 from repro.dse_campaign.space import SpaceSpec
 from repro.runtime.fault_tolerance import HeartbeatMonitor
+from repro.telemetry import metric_value
 
 WorkerId = Union[int, str]
 
@@ -123,12 +124,14 @@ def campaign_config(campaign: Union[Campaign, TileEvaluator]) -> Dict:
     }
 
 
-def evaluator_from_config(cfg: Dict) -> TileEvaluator:
+def evaluator_from_config(cfg: Dict, telemetry=None) -> TileEvaluator:
     """Rebuild a worker-side ``TileEvaluator`` from ``campaign_config``.
 
     Refuses a config whose ``sim_model_version`` differs from this
     process's ``costmodel.SIM_MODEL_VERSION`` — the distributed analogue of
-    the checkpoint-resume version gate.
+    the checkpoint-resume version gate.  ``telemetry`` is the worker's own
+    observability bundle (a telemetry object never crosses the process
+    boundary; only its ``snapshot()`` dict ships back).
     """
     version = cfg.get("sim_model_version")
     if version != costmodel.SIM_MODEL_VERSION:
@@ -145,7 +148,8 @@ def evaluator_from_config(cfg: Dict) -> TileEvaluator:
             evaluator=cfg["evaluator"],
             sim=costmodel.SimConfig(**cfg["sim"]),
             pipeline=cfg["pipeline"],
-            max_survivors=cfg["max_survivors"]))
+            max_survivors=cfg["max_survivors"]),
+        telemetry=telemetry)
 
 
 # ---------------------------------------------------------------------------
@@ -309,6 +313,16 @@ class FabricCoordinator:
                                         clock=clock)
         self.stats = {"deliveries": 0, "duplicates": 0, "reissued_tiles": 0,
                       "lost_workers": []}
+        # the coordinator shares the campaign's telemetry: one trace file
+        # holds the lease/deliver spans AND the evaluation spans
+        self.telemetry = campaign.telemetry
+        self._c_deliveries = self.telemetry.counter("fabric_deliveries_total")
+        self._c_duplicates = self.telemetry.counter("fabric_duplicates_total")
+        self._c_reissued = self.telemetry.counter(
+            "fabric_reissued_tiles_total")
+        self._c_lost = self.telemetry.counter("fabric_lost_workers_total")
+        self._c_expiries = self.telemetry.counter(
+            "fabric_lease_expiries_total")
 
     @classmethod
     def from_checkpoint(cls, path: str, lease_timeout_s: float = 300.0,
@@ -334,29 +348,35 @@ class FabricCoordinator:
 
     def lease(self, worker: WorkerId) -> Optional[int]:
         """Claim the next pending tile for ``worker`` (beats its heart)."""
-        self.monitor.beat(worker)
-        return self.board.next_tile(worker, now=self.monitor.clock())
+        with self.telemetry.span("lease", worker=worker):
+            self.monitor.beat(worker)
+            return self.board.next_tile(worker, now=self.monitor.clock())
 
     def deliver(self, worker: WorkerId, tile: int, reduction: TileReduction,
                 busy_s: float = 0.0) -> bool:
         """Fold one delivered ``TileReduction``; returns ``True`` iff this
         was the tile's FIRST delivery (stats recorded), ``False`` for a
         duplicate (still folded — provably a no-op)."""
-        if worker in self.monitor.last_seen:
-            self.monitor.beat(worker)
-        self.campaign.merge_reduction(reduction, tile)
-        self.stats["deliveries"] += 1
-        newly_done = self.board.complete(tile)
-        if newly_done:
-            self.campaign.tile_stats.append(TileStat(
-                tile=tile,
-                candidates=(reduction.hi - reduction.lo)
-                * len(self.campaign.workloads),
-                wall_s=busy_s))
-            self.campaign.next_tile = self.board.contiguous_done_prefix()
-        else:
-            self.stats["duplicates"] += 1
-        return newly_done
+        with self.telemetry.span("deliver", worker=worker, tile=tile):
+            if worker in self.monitor.last_seen:
+                self.monitor.beat(worker)
+            self.campaign.merge_reduction(reduction, tile)
+            self.stats["deliveries"] += 1
+            self._c_deliveries.inc()
+            self.telemetry.gauge("fabric_worker_busy_s",
+                                 worker=worker).add(busy_s)
+            newly_done = self.board.complete(tile)
+            if newly_done:
+                self.campaign.tile_stats.append(TileStat(
+                    tile=tile,
+                    candidates=(reduction.hi - reduction.lo)
+                    * len(self.campaign.workloads),
+                    wall_s=busy_s))
+                self.campaign.next_tile = self.board.contiguous_done_prefix()
+            else:
+                self.stats["duplicates"] += 1
+                self._c_duplicates.inc()
+            return newly_done
 
     def worker_lost(self, worker: WorkerId) -> List[int]:
         """Declare ``worker`` dead: its leases re-pend for re-issue and it
@@ -365,6 +385,8 @@ class FabricCoordinator:
         self.monitor.forget(worker)
         self.stats["reissued_tiles"] += len(tiles)
         self.stats["lost_workers"].append(worker)
+        self._c_reissued.inc(len(tiles))
+        self._c_lost.inc()
         return tiles
 
     def expire(self) -> Dict[WorkerId, List[int]]:
@@ -374,8 +396,11 @@ class FabricCoordinator:
         alone never expels them (process death is the transport's job to
         detect)."""
         leased = {lease.worker for lease in self.board.leases.values()}
-        return {w: self.worker_lost(w)
-                for w in self.monitor.dead_hosts() if w in leased}
+        expired = {w: self.worker_lost(w)
+                   for w in self.monitor.dead_hosts() if w in leased}
+        if expired:
+            self._c_expiries.inc(len(expired))
+        return expired
 
     # -- state --------------------------------------------------------------
 
@@ -399,7 +424,9 @@ class FabricCoordinator:
 
     def checkpoint(self, path: str) -> str:
         """Atomically persist ``state_dict`` to ``path``."""
-        return store.save_checkpoint(self.state_dict(), path)
+        with self.telemetry.span("checkpoint_write",
+                                 n_done=self.board.n_done):
+            return store.save_checkpoint(self.state_dict(), path)
 
     def result(self, wall_s: float) -> CampaignResult:
         """Materialize the campaign result with the board's (possibly
@@ -476,8 +503,10 @@ class LocalFabric:
         campaign = coord.campaign
         engine = campaign.engine
         space = campaign.space
+        tel = campaign.telemetry
+        clock = tel.clock
         rng = np.random.default_rng(self.seed)
-        t_start = time.perf_counter()
+        t_start = clock()
 
         alive = list(range(self.n_workers))
         for w in alive:
@@ -511,11 +540,13 @@ class LocalFabric:
                     coord.worker_lost(w)
                 else:
                     lo, hi = tile_span(space, tile)
-                    t0 = time.perf_counter()
-                    batch = space.slice(lo, hi,
-                                        with_candidates=not engine.fused)
-                    tr = engine.reduce_tile(batch, lo)
-                    busy = time.perf_counter() - t0
+                    t0 = clock()
+                    with tel.span("tile_eval", tile=tile, worker=w):
+                        with tel.span("tile_slice", tile=tile):
+                            batch = space.slice(
+                                lo, hi, with_candidates=not engine.fused)
+                        tr = engine.reduce_tile(batch, lo)
+                    busy = clock() - t0
                     coord.deliver(w, tile, tr, busy_s=busy)
                     if duplicate_pending:
                         duplicate_pending = False
@@ -537,7 +568,7 @@ class LocalFabric:
                     f"{coord.board.n_pending} tiles pending")
         if checkpoint_path:
             coord.checkpoint(checkpoint_path)
-        return coord.result(time.perf_counter() - t_start)
+        return coord.result(clock() - t_start)
 
 
 # ---------------------------------------------------------------------------
@@ -552,14 +583,22 @@ def _worker_main(worker_id: int, cfg: Dict, worker_cfg: Dict,
     busy_s)``): emits ``("ready", ...)`` once warm, then for each leased
     tile received on ``task_q`` evaluates it with the shared
     ``TileEvaluator`` and emits ``("result", wid, tile, TileReduction,
-    busy_s)``; ``None`` on ``task_q`` is shutdown.  ``busy_s`` is
-    ``time.process_time`` (CPU actually burned on the tile), the
-    machine-independent cost the scaling benchmark aggregates.  Fused
-    evaluators warm up (trace + compile) on tile 0's shape before
-    signalling ready, so per-tile busy excludes one-time compile cost.
+    busy_s)``; ``None`` on ``task_q`` is shutdown, answered with a terminal
+    ``("metrics", wid, None, snapshot, 0.0)`` carrying the worker's own
+    telemetry snapshot (``worker_busy_s_total`` / ``worker_tiles_total``
+    plus the evaluator counters) — per-worker busy time is now measured
+    where the work happens instead of reconstructed from coordinator clock
+    arithmetic.  ``busy_s`` is ``time.process_time`` (CPU actually burned
+    on the tile), the machine-independent cost the scaling benchmark
+    aggregates.  Fused evaluators warm up (trace + compile) on tile 0's
+    shape before signalling ready, so per-tile busy excludes one-time
+    compile cost.
     """
     try:
         evaluator = evaluator_from_config(cfg)
+        tel = evaluator.telemetry
+        c_busy = tel.counter("worker_busy_s_total")
+        c_tiles = tel.counter("worker_tiles_total")
         space = evaluator.space
         if evaluator.fused:
             lo, hi = tile_span(space, 0)
@@ -571,18 +610,34 @@ def _worker_main(worker_id: int, cfg: Dict, worker_cfg: Dict,
         while True:
             tile = task_q.get()
             if tile is None:
+                result_q.put(("metrics", worker_id, None, tel.snapshot(),
+                              0.0))
                 return
             n_received += 1
             t0 = time.process_time()
             lo, hi = tile_span(space, tile)
-            batch = space.slice(lo, hi, with_candidates=not evaluator.fused)
-            if die_on_nth is not None and n_received >= die_on_nth:
-                os._exit(40)  # injected crash mid-tile: result never ships
-            reduction = evaluator.reduce_tile(batch, lo)
-            result_q.put(("result", worker_id, tile, reduction,
-                          time.process_time() - t0))
+            with tel.span("tile_eval", tile=tile, worker=worker_id):
+                with tel.span("tile_slice", tile=tile):
+                    batch = space.slice(lo, hi,
+                                        with_candidates=not evaluator.fused)
+                if die_on_nth is not None and n_received >= die_on_nth:
+                    # Flush and retire the queue's feeder thread before
+                    # dying: ``os._exit`` while the feeder holds the shared
+                    # ``result_q`` write lock (it can lose the GIL between
+                    # sending bytes and releasing the lock) would wedge
+                    # every surviving worker's puts — the fabric stalls.
+                    result_q.close()
+                    result_q.join_thread()
+                    os._exit(40)  # injected crash mid-tile: no result ships
+                reduction = evaluator.reduce_tile(batch, lo)
+            busy = time.process_time() - t0
+            c_busy.inc(busy)
+            c_tiles.inc()
+            result_q.put(("result", worker_id, tile, reduction, busy))
     except BaseException as exc:  # surface config/eval errors, then die
         result_q.put(("error", worker_id, None, repr(exc), 0.0))
+        result_q.close()          # guarantee the error ships and the shared
+        result_q.join_thread()    # write lock is released before exiting
         os._exit(1)
 
 
@@ -630,6 +685,7 @@ class MultiprocessFabric:
         cfg = campaign_config(self.campaign)
         coord = FabricCoordinator(self.campaign,
                                   lease_timeout_s=self.lease_timeout_s)
+        clock = self.campaign.telemetry.clock
         ctx = mp.get_context("spawn")  # jax is not fork-safe
         result_q = ctx.Queue()
         procs: Dict[int, mp.Process] = {}
@@ -646,6 +702,7 @@ class MultiprocessFabric:
             procs[w] = p
 
         busy_s = {w: 0.0 for w in procs}
+        worker_metrics: Dict[int, Dict] = {}
         idle: List[int] = []
         ready: set = set()
         lost: set = set()
@@ -674,7 +731,7 @@ class MultiprocessFabric:
                 idle.remove(w)
             coord.worker_lost(w)
             if window_t0 is None and len(ready | lost) == self.n_workers:
-                window_t0 = time.perf_counter()  # peer died during warm-up
+                window_t0 = clock()  # peer died during warm-up
 
         try:
             while not coord.all_done:
@@ -687,7 +744,9 @@ class MultiprocessFabric:
                     idle.append(w)
                     ready.add(w)
                     if len(ready | lost) == self.n_workers:
-                        window_t0 = time.perf_counter()
+                        window_t0 = clock()
+                elif kind == "metrics":
+                    worker_metrics[w] = payload
                 elif kind == "result":
                     busy_s[w] += t
                     newly = coord.deliver(w, tile, payload, busy_s=t)
@@ -723,17 +782,36 @@ class MultiprocessFabric:
                 p.join(timeout=5)
                 if p.is_alive():
                     p.terminate()
-        window_s = (time.perf_counter() - window_t0
-                    if window_t0 is not None else 0.0)
+            # drain the terminal payloads: each clean-shutdown worker
+            # answers its None with a ("metrics", ...) snapshot (a crashed
+            # worker never does — its entry is simply absent)
+            while True:
+                try:
+                    kind, w, tile, payload, t = result_q.get(timeout=0.2)
+                except queue_mod.Empty:
+                    break
+                if kind == "metrics":
+                    worker_metrics[w] = payload
+        window_s = clock() - window_t0 if window_t0 is not None else 0.0
         if checkpoint_path:
             coord.checkpoint(checkpoint_path)
+        # prefer the busy total the worker measured itself (shipped in its
+        # metrics snapshot) over the coordinator-side per-result sum; the
+        # per-result sum stays the fallback for crashed workers
+        busy_final = {
+            w: metric_value(worker_metrics[w], "worker_busy_s_total",
+                            default=busy_s[w])
+            if w in worker_metrics else busy_s[w]
+            for w in busy_s}
         self.stats = {
             **coord.stats,
             "n_workers": self.n_workers,
-            "worker_busy_s": busy_s,
-            "max_worker_busy_s": max(busy_s.values()) if busy_s else 0.0,
-            "total_busy_s": sum(busy_s.values()),
+            "worker_busy_s": busy_final,
+            "max_worker_busy_s": (max(busy_final.values())
+                                  if busy_final else 0.0),
+            "total_busy_s": sum(busy_final.values()),
             "window_s": window_s,
+            "worker_metrics": worker_metrics,
         }
         return coord.result(window_s)
 

@@ -45,7 +45,6 @@ import dataclasses
 import functools
 import queue
 import threading
-import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -58,6 +57,7 @@ from repro.dse_campaign.config import (EVALUATORS, CampaignConfig,
                                        coerce_config)
 from repro.dse_campaign.frontier import StreamingFrontier
 from repro.dse_campaign.space import SpaceSpec
+from repro.telemetry import coerce_telemetry
 
 WorkloadKey = Tuple[str, str]
 
@@ -259,11 +259,15 @@ class TileEvaluator:
     ``fused_launches`` counts fused multi-workload sweep launches
     (``sweep_reduced`` calls) over this evaluator's lifetime — the serving
     layer's "batched concurrent queries ride ONE launch" assertion reads
-    it, so the claim is measured rather than assumed.
+    it, so the claim is measured rather than assumed.  It is now a view
+    over the evaluator's telemetry counter
+    (``evaluator_fused_launches_total``); pass ``telemetry=`` to share a
+    registry/tracer with the caller, or omit it for a private
+    ``NullTelemetry`` (counters still count, tracing is free).
     """
 
     def __init__(self, workloads: Sequence[dse.Workload], config=None,
-                 **legacy):
+                 telemetry=None, **legacy):
         cfg = coerce_config("TileEvaluator", config, legacy,
                             _EVALUATOR_LEGACY)
         keys = [(wl.arch, wl.shape) for wl in workloads]
@@ -279,7 +283,19 @@ class TileEvaluator:
         self.cycles_model = cfg.cycles_model
         self.pipeline = bool(cfg.pipeline)
         self.max_survivors = int(cfg.max_survivors)
-        self.fused_launches = 0
+        self.telemetry = coerce_telemetry(telemetry)
+        # held series: the hot path pays one attribute read, not a dict hit
+        self._c_fused = self.telemetry.counter("evaluator_fused_launches_total")
+        self._c_candidates = self.telemetry.counter(
+            "evaluator_candidates_total")
+        self._c_survivors = self.telemetry.counter(
+            "evaluator_survivors_total")
+
+    @property
+    def fused_launches(self) -> int:
+        """Fused sweep launches so far — a view over the telemetry counter
+        (kept as the historical public reading surface)."""
+        return int(self._c_fused.value)
 
     @property
     def fused(self) -> bool:
@@ -358,25 +374,31 @@ class TileEvaluator:
     def sweep_reduced(self, batch: dse.CandidateBatch
                       ) -> costmodel.SweepReduced:
         """ONE fused launch: all workloads x one padded tile, skyline-reduced
-        on device."""
-        self.fused_launches += 1
-        arrays = self.padded_tile_arrays(batch)
+        on device.  Spans wrap the host-side stages only — ``pad`` (array
+        staging) and ``launch`` (the device dispatch); tracing never enters
+        the jitted/Pallas code itself."""
+        self._c_fused.inc()
+        with self.telemetry.span("pad", n=len(batch)):
+            arrays = self.padded_tile_arrays(batch)
         cons = self.constraint
-        if self.evaluator == "pallas":
-            from repro.kernels import ops
-            from repro.kernels.dse_sweep import pack_cand_cols
-            return ops.dse_sweep(
-                pack_cand_cols(arrays), self.wl_cols, sim=self.sim,
-                constraint=cons, max_survivors=self.max_survivors,
-                n_valid=len(batch))
-        return costmodel.sweep_workloads_reduced_jit(
-            self.wl_cols,
-            {k: arrays[k] for k in costmodel.SWEEP_GATHER_FIELDS},
-            arrays["n_chips"], arrays["freq_mhz"], arrays["mesh_pod"],
-            arrays["mesh_data"], arrays["mesh_model"], arrays["valid"],
-            sim=self.sim, max_power_w=cons.max_power_w,
-            max_latency_s=cons.max_latency_s, min_hbm_fit=cons.min_hbm_fit,
-            max_survivors=self.max_survivors)
+        with self.telemetry.span("launch", evaluator=self.evaluator,
+                                 n=len(batch)):
+            if self.evaluator == "pallas":
+                from repro.kernels import ops
+                from repro.kernels.dse_sweep import pack_cand_cols
+                return ops.dse_sweep(
+                    pack_cand_cols(arrays), self.wl_cols, sim=self.sim,
+                    constraint=cons, max_survivors=self.max_survivors,
+                    n_valid=len(batch))
+            return costmodel.sweep_workloads_reduced_jit(
+                self.wl_cols,
+                {k: arrays[k] for k in costmodel.SWEEP_GATHER_FIELDS},
+                arrays["n_chips"], arrays["freq_mhz"], arrays["mesh_pod"],
+                arrays["mesh_data"], arrays["mesh_model"], arrays["valid"],
+                sim=self.sim, max_power_w=cons.max_power_w,
+                max_latency_s=cons.max_latency_s,
+                min_hbm_fit=cons.min_hbm_fit,
+                max_survivors=self.max_survivors)
 
     # -- the normalized reduction -------------------------------------------
 
@@ -423,29 +445,37 @@ class TileEvaluator:
 
         if self.fused:
             red = self.sweep_reduced(batch)
-            for wi in range(len(self.workloads)):
-                if red.overflowed(wi):
-                    add(*self._reduce_rows(
-                        np.asarray(red.energy_full)[wi][:n],
-                        np.asarray(red.latency_full)[wi][:n],
-                        np.asarray(red.feasible_full)[wi][:n], lo))
-                    continue
-                k = int(red.n_survivors[wi])
-                nf = int(red.n_feasible[wi])
-                add(lo + red.surv_idx[wi][:k].astype(np.int64),
-                    red.surv_energy[wi][:k].astype(np.float64),
-                    red.surv_latency[wi][:k].astype(np.float64), nf,
-                    float(red.ref_energy[wi]) if nf else None,
-                    float(red.ref_latency[wi]) if nf else None)
+            with self.telemetry.span("compact", n=n):
+                for wi in range(len(self.workloads)):
+                    if red.overflowed(wi):
+                        add(*self._reduce_rows(
+                            np.asarray(red.energy_full)[wi][:n],
+                            np.asarray(red.latency_full)[wi][:n],
+                            np.asarray(red.feasible_full)[wi][:n], lo))
+                        continue
+                    k = int(red.n_survivors[wi])
+                    nf = int(red.n_feasible[wi])
+                    add(lo + red.surv_idx[wi][:k].astype(np.int64),
+                        red.surv_energy[wi][:k].astype(np.float64),
+                        red.surv_latency[wi][:k].astype(np.float64), nf,
+                        float(red.ref_energy[wi]) if nf else None,
+                        float(red.ref_latency[wi]) if nf else None)
         else:
             for wl in self.workloads:
-                energy, latency, feasible = self.evaluate_workload(wl, batch)
-                add(*self._reduce_rows(energy, latency, feasible, lo))
-        return TileReduction(
+                with self.telemetry.span("launch", evaluator=self.evaluator,
+                                         workload=f"{wl.arch}|{wl.shape}"):
+                    energy, latency, feasible = \
+                        self.evaluate_workload(wl, batch)
+                with self.telemetry.span("compact", n=n):
+                    add(*self._reduce_rows(energy, latency, feasible, lo))
+        tr = TileReduction(
             lo=lo, hi=lo + n,
             surv_gidx=tuple(cols["gidx"]), surv_energy=tuple(cols["e"]),
             surv_latency=tuple(cols["l"]), n_feasible=tuple(cols["nf"]),
             ref_energy_j=tuple(cols["re"]), ref_latency_s=tuple(cols["rl"]))
+        self._c_candidates.inc(n * len(self.workloads))
+        self._c_survivors.inc(tr.n_survivors)
+        return tr
 
 
 class Campaign:
@@ -476,9 +506,11 @@ class Campaign:
     """
 
     def __init__(self, workloads: Sequence[dse.Workload], config=None,
-                 **legacy):
+                 telemetry=None, **legacy):
         cfg = coerce_config("Campaign", config, legacy, _CAMPAIGN_LEGACY)
-        self.engine = TileEvaluator(workloads, cfg)
+        self.telemetry = coerce_telemetry(telemetry)
+        self.engine = TileEvaluator(workloads, cfg,
+                                    telemetry=self.telemetry)
         self.checkpoint_every = int(cfg.checkpoint_every)
         self.frontiers: Dict[WorkloadKey, StreamingFrontier] = {
             k: StreamingFrontier() for k in self.engine.workload_keys}
@@ -606,6 +638,7 @@ class Campaign:
             # legacy "jit" campaign could flip float32 near-ties
             # mid-frontier
             pipeline=state.get("pipeline", False))
+        telemetry = kwargs.pop("telemetry", None)
         if kwargs:
             unknown = set(kwargs) - {f.name for f in
                                      dataclasses.fields(CampaignConfig)}
@@ -613,7 +646,7 @@ class Campaign:
                 raise TypeError(f"from_checkpoint: unexpected keyword "
                                 f"arguments {sorted(unknown)}")
             cfg = cfg.replace(**kwargs)
-        camp = cls(workloads, cfg)
+        camp = cls(workloads, cfg, telemetry=telemetry)
         camp.next_tile = state["next_tile"]
         camp.tile_stats = [TileStat(**s) for s in state["tile_stats"]]
         for key_str, fr_state in state["frontiers"].items():
@@ -650,40 +683,60 @@ class Campaign:
         ``checkpoint_every`` tiles and at the end."""
         if checkpoint_path is None:
             checkpoint_path = self.config.checkpoint_path
-        t_start = time.perf_counter()
+        tel = self.telemetry
+        clock = tel.clock
+        c_tiles = tel.counter("campaign_tiles_total")
+        c_ckpt = tel.counter("campaign_checkpoint_writes_total")
+        t_start = clock()
         done_this_call = 0
         fused = self.fused
+        engine = self.engine
         tiles = _TilePrefetcher(self.space.tiles(
             start_tile=self.next_tile, with_candidates=not fused))
         try:
             for tile_no, lo, batch in tiles:
                 if max_tiles is not None and done_this_call >= max_tiles:
                     break
-                t0 = time.perf_counter()
-                if fused:
-                    self.merge_reduction(self.engine.reduce_tile(batch, lo),
-                                         tile_no)
-                else:
-                    indices = np.arange(lo, lo + len(batch), dtype=np.int64)
-                    for wl in self.workloads:
-                        energy, latency, feasible = \
-                            self.engine.evaluate_workload(wl, batch)
-                        self.frontiers[(wl.arch, wl.shape)].merge(
-                            batch.candidates, energy, latency, feasible,
-                            indices=indices, tile=tile_no)
+                t0 = clock()
+                with tel.span("tile_eval", tile=tile_no, n=len(batch)):
+                    if fused:
+                        tr = engine.reduce_tile(batch, lo)
+                        with tel.span("merge", tile=tile_no):
+                            self.merge_reduction(tr, tile_no)
+                    else:
+                        indices = np.arange(lo, lo + len(batch),
+                                            dtype=np.int64)
+                        for wl in self.workloads:
+                            with tel.span(
+                                    "launch", evaluator=engine.evaluator,
+                                    workload=f"{wl.arch}|{wl.shape}"):
+                                energy, latency, feasible = \
+                                    engine.evaluate_workload(wl, batch)
+                            with tel.span("merge", tile=tile_no):
+                                self.frontiers[(wl.arch, wl.shape)].merge(
+                                    batch.candidates, energy, latency,
+                                    feasible, indices=indices, tile=tile_no)
+                        engine._c_candidates.inc(
+                            len(batch) * len(self.workloads))
+                c_tiles.inc()
                 self.tile_stats.append(TileStat(
                     tile=tile_no,
                     candidates=len(batch) * len(self.workloads),
-                    wall_s=time.perf_counter() - t0))
+                    wall_s=clock() - t0))
                 self.next_tile = tile_no + 1
                 done_this_call += 1
                 if checkpoint_path and (self.next_tile % self.checkpoint_every == 0):
-                    store.save_checkpoint(self.state_dict(), checkpoint_path)
+                    with tel.span("checkpoint_write", tile=tile_no):
+                        store.save_checkpoint(self.state_dict(),
+                                              checkpoint_path)
+                    c_ckpt.inc()
         finally:
             tiles.close()
         if checkpoint_path:
-            store.save_checkpoint(self.state_dict(), checkpoint_path)
-        return self._result(time.perf_counter() - t_start)
+            with tel.span("checkpoint_write", tile=self.next_tile - 1):
+                store.save_checkpoint(self.state_dict(), checkpoint_path)
+            c_ckpt.inc()
+        return self._result(clock() - t_start)
 
     def _result(self, wall_s: float, tiles_done: Optional[int] = None
                 ) -> CampaignResult:

@@ -70,8 +70,13 @@ def load_checkpoint(path: str) -> Dict:
 
 
 def campaign_payload(result, space_dict: Dict, constraint: Dict,
-                     evaluator: str, seed: int = 0) -> Dict:
-    """``CampaignResult`` -> the BENCH_dse_campaign.json payload."""
+                     evaluator: str, seed: int = 0,
+                     extra: Dict = None) -> Dict:
+    """``CampaignResult`` -> the BENCH_dse_campaign.json payload.
+
+    ``extra`` keys (e.g. a ``"telemetry"`` metrics snapshot from
+    ``Telemetry.snapshot()``) are merged on top of the standard payload —
+    additive observability only, never overriding a standard key."""
     frontiers = {}
     for (arch, shape), front in sorted(result.frontiers.items()):
         frontiers[f"{arch}|{shape}"] = {
@@ -87,7 +92,16 @@ def campaign_payload(result, space_dict: Dict, constraint: Dict,
     trajectories = {
         f"{arch}|{shape}": [s.as_dict() for s in snaps]
         for (arch, shape), snaps in sorted(result.trajectories.items())}
+    if extra:
+        overlap = extra.keys() & {
+            "bench", "seed", "python", "sim_model_version", "space",
+            "constraint", "evaluator", "workloads", "tiles_done", "n_tiles",
+            "complete", "throughput", "frontiers", "trajectory"}
+        if overlap:
+            raise ValueError(f"campaign_payload: extra keys {sorted(overlap)} "
+                             "would override standard payload keys")
     return {
+        **(extra or {}),
         "bench": "dse_campaign",
         "seed": seed,
         "python": platform.python_version(),
@@ -113,8 +127,9 @@ def campaign_payload(result, space_dict: Dict, constraint: Dict,
 
 def save_campaign(result, space_dict: Dict, constraint: Dict, evaluator: str,
                   out_dir: str, seed: int = 0,
-                  fname: str = CAMPAIGN_BENCH_NAME) -> str:
+                  fname: str = CAMPAIGN_BENCH_NAME,
+                  extra: Dict = None) -> str:
     """Write the campaign report JSON; returns the path."""
     payload = campaign_payload(result, space_dict, constraint, evaluator,
-                               seed=seed)
+                               seed=seed, extra=extra)
     return atomic_write_json(payload, os.path.join(out_dir, fname))

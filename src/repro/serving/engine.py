@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
+from repro.telemetry import coerce_telemetry
 
 
 @dataclasses.dataclass
@@ -54,12 +55,14 @@ class ServingEngine:
     """Static-shape continuous batching over ``slots`` concurrent sequences."""
 
     def __init__(self, model: Model, slots: int = 4, max_len: int = 512,
-                 greedy: bool = True):
+                 greedy: bool = True,
+                 clock: Callable[[], float] = time.perf_counter):
         assert model.decode is not None, "family has no decode step"
         self.model = model
         self.slots = slots
         self.max_len = max_len
         self.greedy = greedy
+        self._clock = clock
         self.params = None
         self.cache = None
         self.slot_req: List[Optional[Request]] = [None] * slots
@@ -74,7 +77,7 @@ class ServingEngine:
     # --- admission ---------------------------------------------------------------
 
     def submit(self, req: Request):
-        req.arrived_s = time.perf_counter()
+        req.arrived_s = self._clock()
         self.queue.append(req)
 
     def _admit(self):
@@ -95,10 +98,10 @@ class ServingEngine:
             self._step_single_token(slot, int(t))
         logits = self._step_single_token(slot, int(req.prompt[-1]))
         req.tokens_out.append(int(np.argmax(logits)))
-        req.first_token_s = time.perf_counter()
+        req.first_token_s = self._clock()
         if len(req.tokens_out) >= req.max_new_tokens:
             req.done = True
-            req.finished_s = time.perf_counter()
+            req.finished_s = self._clock()
             self.slot_req[slot] = None
 
     def _step_single_token(self, slot: int, token: int):
@@ -132,19 +135,19 @@ class ServingEngine:
             if (len(req.tokens_out) >= req.max_new_tokens
                     or self.slot_len[s] >= self.max_len - 1):
                 req.done = True
-                req.finished_s = time.perf_counter()
+                req.finished_s = self._clock()
                 self.slot_req[s] = None
         return len(live)
 
     def run_until_drained(self, max_iters: int = 10_000) -> Dict:
-        t0 = time.perf_counter()
+        t0 = self._clock()
         decoded = 0
         for _ in range(max_iters):
             n = self.step()
             decoded += n
             if n == 0 and not self.queue:
                 break
-        dt = time.perf_counter() - t0
+        dt = self._clock() - t0
         return {"decoded_tokens": decoded, "wall_s": dt,
                 "tok_per_s": decoded / dt if dt > 0 else 0.0}
 
@@ -260,11 +263,19 @@ class SelectionEngine:
     so the claim is measured, not assumed.  Per-row results of the fused
     sweep are lane-local, so batched answers are bitwise identical to
     sequential ones.
+
+    Observability: pass ``telemetry=`` to share a metrics registry / tracer
+    with the caller (per-path ``selection_latency_s`` histograms,
+    ``selection_queries_total`` counters, the ``selection_deadline_ema_s``
+    gauge and the mini-campaign spans land there); the default is a private
+    ``NullTelemetry`` — counters still count, tracing is free.  The EMA the
+    deadline triage BRANCHES on stays a plain attribute; the gauge only
+    mirrors it (instrumented values never feed computation).
     """
 
     def __init__(self, index: FrontierIndex, config: CampaignConfig = None,
                  top_k: int = 5, match_rtol: float = 1e-9,
-                 verify_top: int = 256):
+                 verify_top: int = 256, telemetry=None):
         if config is None:
             config = self._config_from_index(index)
         elif not isinstance(config, CampaignConfig):
@@ -279,12 +290,22 @@ class SelectionEngine:
         self.verify_top = int(verify_top)
         self.index_constraint = _dse.Constraint(**index.constraint_dict)
         self.pending: List[SelectionQuery] = []
-        self.fused_launches = 0
+        self.telemetry = coerce_telemetry(telemetry)
+        self._clock = self.telemetry.clock
+        self._c_fused = self.telemetry.counter("selection_fused_launches_total")
+        self._g_ema = self.telemetry.gauge("selection_deadline_ema_s")
         self.stats: Dict[str, int] = {p: 0 for p in PROVENANCES}
         self.stats["queries"] = 0
         self._next_qid = 0
         self._exact_ema_s: Optional[float] = None
         self._full_batch: Optional[_dse.CandidateBatch] = None
+
+    @property
+    def fused_launches(self) -> int:
+        """Fused fallback-sweep launches over the engine's lifetime — a view
+        over the ``selection_fused_launches_total`` telemetry counter (kept
+        as the historical public reading surface)."""
+        return int(self._c_fused.value)
 
     @staticmethod
     def _config_from_index(index: FrontierIndex) -> CampaignConfig:
@@ -311,7 +332,7 @@ class SelectionEngine:
         self._next_qid += 1
         self.pending.append(SelectionQuery(
             workload=workload, constraint=constraint, deadline_s=deadline_s,
-            qid=qid, submitted_s=time.perf_counter()))
+            qid=qid, submitted_s=self._clock()))
         return qid
 
     def select(self, workload: _dse.Workload,
@@ -329,21 +350,24 @@ class SelectionEngine:
         grouped by constraint — each group is ONE fused sweep launch.
         """
         queries, self.pending = self.pending, []
+        tel = self.telemetry
         answers: Dict[int, SelectionAnswer] = {}
         novel: List[SelectionQuery] = []
         for q in queries:
-            t0 = time.perf_counter()
-            entry = (self.index.lookup(q.workload, self.match_rtol)
-                     if self._index_eligible(q) else None)
+            t0 = self._clock()
+            with tel.span("index_lookup", qid=q.qid):
+                entry = (self.index.lookup(q.workload, self.match_rtol)
+                         if self._index_eligible(q) else None)
             if entry is not None:
                 answers[q.qid] = self._answer_from_entry(
-                    q, entry, time.perf_counter() - t0)
+                    q, entry, self._clock() - t0)
             else:
                 novel.append(q)
         exact: List[SelectionQuery] = []
         for q in novel:
             if self._must_degrade(q):
-                answers[q.qid] = self._answer_predictor_only(q)
+                with tel.span("predictor_only", qid=q.qid):
+                    answers[q.qid] = self._answer_predictor_only(q)
             else:
                 exact.append(q)
         groups: Dict[Tuple, List[SelectionQuery]] = {}
@@ -352,19 +376,26 @@ class SelectionEngine:
                 dataclasses.astuple(self._query_constraint(q)),
                 []).append(q)
         for group in groups.values():
-            t0 = time.perf_counter()
-            fronts, gidx = self._mini_campaign(
-                [q.workload for q in group], self._query_constraint(group[0]))
-            dt = time.perf_counter() - t0
+            t0 = self._clock()
+            with tel.span("mini_campaign", n_queries=len(group)):
+                fronts, gidx = self._mini_campaign(
+                    [q.workload for q in group],
+                    self._query_constraint(group[0]))
+            dt = self._clock() - t0
             self._exact_ema_s = (dt if self._exact_ema_s is None
                                  else 0.5 * (self._exact_ema_s + dt))
+            self._g_ema.set(self._exact_ema_s)
             for q, front in zip(group, fronts):
                 answers[q.qid] = self._answer_from_frontier(
                     q, front, "mini_campaign", dt / len(group),
                     verified_gidx=gidx)
         for q in queries:
+            ans = answers[q.qid]
             self.stats["queries"] += 1
-            self.stats[answers[q.qid].provenance] += 1
+            self.stats[ans.provenance] += 1
+            tel.counter("selection_queries_total", path=ans.provenance).inc()
+            tel.histogram("selection_latency_s",
+                          path=ans.provenance).observe(ans.wall_s)
         return [answers[q.qid] for q in queries]
 
     # -- the three answer paths ---------------------------------------------
@@ -386,7 +417,7 @@ class SelectionEngine:
         """
         if not self._has_models or q.deadline_s is None:
             return False
-        remaining = q.deadline_s - (time.perf_counter() - q.submitted_s)
+        remaining = q.deadline_s - (self._clock() - q.submitted_s)
         if remaining <= 0:
             return True
         return self._exact_ema_s is not None and remaining < self._exact_ema_s
@@ -457,7 +488,7 @@ class SelectionEngine:
         return energy, latency, feasible
 
     def _answer_predictor_only(self, q: SelectionQuery) -> SelectionAnswer:
-        t0 = time.perf_counter()
+        t0 = self._clock()
         constraint = self._query_constraint(q)
         energy, latency, feasible = self._predict(q.workload, constraint)
         mask = _dse.pareto_mask(energy, latency, feasible)
@@ -471,7 +502,7 @@ class SelectionEngine:
             indices=loc.astype(np.int64),
             feasible_count=int(np.asarray(feasible, bool).sum()))
         return self._answer_from_frontier(
-            q, front, "predictor_only", time.perf_counter() - t0,
+            q, front, "predictor_only", self._clock() - t0,
             exact=False)
 
     def _candidate_slice(self, workloads: Sequence[_dse.Workload],
@@ -517,7 +548,11 @@ class SelectionEngine:
         """
         tagged = [dse_workload_tagged(wl, i) for i, wl in enumerate(workloads)]
         cfg = self.config.replace(constraint=constraint)
-        ev = TileEvaluator(tagged, cfg)
+        # the evaluator shares this engine's telemetry (pad/launch/compact
+        # spans nest under the mini_campaign span); its lifetime counter is
+        # shared too, so the launch count for THIS sweep is a delta
+        ev = TileEvaluator(tagged, cfg, telemetry=self.telemetry)
+        launches_before = ev._c_fused.value
         gidx = self._candidate_slice(workloads, constraint)
         if gidx.size == len(self.space):
             batch = self._full_space_batch()
@@ -525,7 +560,7 @@ class SelectionEngine:
             batch = _dse.CandidateBatch.from_candidates(
                 self.space.candidates_at(gidx))
         tr = ev.reduce_tile(batch, 0)
-        self.fused_launches += ev.fused_launches
+        self._c_fused.inc(ev._c_fused.value - launches_before)
         fronts: List[_dse.ParetoFrontier] = []
         for wi, wl in enumerate(workloads):
             loc = tr.surv_gidx[wi]                 # local slice positions

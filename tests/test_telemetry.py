@@ -1,0 +1,297 @@
+"""Telemetry subsystem tests: metrics registry, span tracer, and the one
+rule that keeps observability safe — instrumentation is a reading, never an
+input.  The headline identity: a fully instrumented campaign's frontier is
+BITWISE-equal to an uninstrumented one (``NullTelemetry`` default), so the
+registry/tracer can ride every hot path without touching results."""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import dse
+from repro.dse_campaign import (Campaign, FakeClock, LocalFabric,
+                                MultiprocessFabric, SliceVariant, SpaceSpec,
+                                frontiers_identical)
+from repro.telemetry import (MetricsRegistry, NullTelemetry, SpanTracer,
+                             Telemetry, coerce_telemetry, metric_value)
+from repro.telemetry.trace import NULL_SPAN
+from tools import trace_report
+
+BASE = {"flops": 3.2e14, "hbm_bytes": 4.5e13, "collective_bytes": 5e11,
+        "wire_bytes": 7e11}
+WLS = [dse.Workload("qwen3_14b", "train_4k", BASE, 256, 0.5),
+       dse.Workload("stablelm_1_6b", "serve_2k",
+                    {k: v * 0.3 for k, v in BASE.items()}, 64, 0.2)]
+CONS = dse.Constraint(max_power_w=50_000)
+
+
+def small_spec(**kw):
+    kw.setdefault("chips", ("tpu-v5e", "tpu-v4", "tpu-edge"))
+    kw.setdefault("chip_counts", (16, 64))
+    kw.setdefault("freq_points", 7)
+    kw.setdefault("variants", (SliceVariant(), SliceVariant("bin85", 0.85)))
+    kw.setdefault("chunk_size", 32)
+    return SpaceSpec(**kw)
+
+
+# ---------------------------------------------------------------- metrics --
+
+
+class TestMetricsRegistry:
+    def test_counter_monotonic(self):
+        reg = MetricsRegistry(clock=FakeClock(5.0))
+        c = reg.counter("tiles_total")
+        c.inc()
+        c.inc(3)
+        assert c.value == 4
+        assert c.updated_at == 5.0
+        with pytest.raises(ValueError):
+            c.inc(-1)
+
+    def test_labeled_series_are_distinct(self):
+        reg = MetricsRegistry()
+        a = reg.counter("queries_total", path="index_exact")
+        b = reg.counter("queries_total", path="mini_campaign")
+        a.inc(2)
+        b.inc(5)
+        assert a is not b and a.value == 2 and b.value == 5
+        # same (name, labels) -> the SAME series object (held-series idiom)
+        assert reg.counter("queries_total", path="index_exact") is a
+
+    def test_kind_conflict_raises(self):
+        reg = MetricsRegistry()
+        reg.counter("busy_s")
+        with pytest.raises(ValueError, match="already registered"):
+            reg.gauge("busy_s")
+
+    def test_gauge_set_and_add(self):
+        reg = MetricsRegistry()
+        g = reg.gauge("worker_busy_s", worker=0)
+        assert g.value is None
+        g.add(1.5)
+        g.add(0.5)
+        assert g.value == 2.0
+        g.set(7.0)
+        assert g.value == 7.0
+
+    def test_histogram_quantile_matches_numpy(self):
+        rng = np.random.default_rng(7)
+        samples = rng.lognormal(mean=-6.0, sigma=1.3, size=513)
+        reg = MetricsRegistry()
+        h = reg.histogram("latency_s")
+        for s in samples:
+            h.observe(float(s))
+        for q in (0.0, 0.1, 0.5, 0.9, 0.99, 1.0):
+            np.testing.assert_allclose(
+                h.quantile(q), np.percentile(samples, q * 100),
+                rtol=1e-12, err_msg=f"q={q}")
+        assert h.count == samples.size
+        np.testing.assert_allclose(h.sum, samples.sum())
+        assert h.min == samples.min() and h.max == samples.max()
+
+    def test_histogram_ring_bounds_memory_but_totals_exact(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("latency_s", max_samples=64)
+        for i in range(1000):
+            h.observe(float(i))
+        assert len(h.samples) == 64
+        assert h.samples == [float(i) for i in range(936, 1000)]
+        assert h.count == 1000 and h.sum == sum(range(1000))
+        assert h.min == 0.0 and h.max == 999.0
+
+    def test_histogram_empty_and_bad_q(self):
+        h = MetricsRegistry().histogram("x_s")
+        assert h.quantile(0.5) is None
+        h.observe(1.0)
+        with pytest.raises(ValueError):
+            h.quantile(1.5)
+
+    def test_snapshot_roundtrips_through_json(self):
+        tel = Telemetry(clock=FakeClock(1.0))
+        tel.counter("tiles_total").inc(3)
+        tel.gauge("ema_s").set(0.25)
+        tel.histogram("lat_s", path="exact").observe(0.5)
+        snap = json.loads(json.dumps(tel.snapshot()))
+        assert metric_value(snap, "tiles_total") == 3
+        assert metric_value(snap, "ema_s", kind="gauges") == 0.25
+        row = metric_value(snap, "lat_s", kind="histograms", path="exact")
+        assert row["count"] == 1 and row["p50"] == 0.5
+        assert metric_value(snap, "absent_total", default=-1) == -1
+
+    def test_fakeclock_snapshots_deterministic(self):
+        def activity():
+            tel = Telemetry(clock=FakeClock(10.0))
+            c = tel.counter("tiles_total")
+            for _ in range(5):
+                tel.clock.advance(0.125)
+                c.inc()
+                tel.histogram("tile_wall_s").observe(0.125)
+            return tel.snapshot()
+
+        a, b = activity(), activity()
+        assert a == b                       # identical activity, identical snap
+        assert a["clock_s"] == 10.625
+        assert metric_value(a, "tiles_total") == 5
+
+
+# ----------------------------------------------------------------- tracer --
+
+
+class TestSpanTracer:
+    def test_nesting_parent_depth(self):
+        tr = SpanTracer(clock=FakeClock(0.0))
+        with tr.span("tile_eval", tile=3) as outer:
+            tr.clock.advance(0.5)
+            with tr.span("launch") as inner:
+                tr.clock.advance(0.25)
+        outer_r, inner_r = {r.name: r for r in tr.records}["tile_eval"], \
+            {r.name: r for r in tr.records}["launch"]
+        assert outer_r.parent == -1 and outer_r.depth == 0
+        assert inner_r.parent == outer_r.sid and inner_r.depth == 1
+        assert outer_r.dur == 0.75 and inner_r.dur == 0.25
+        assert outer_r.attrs == {"tile": 3}
+        assert inner_r.sid == outer.sid + 1 == inner.sid
+
+    def test_ring_evicts_oldest(self):
+        tr = SpanTracer(capacity=8)
+        for i in range(20):
+            with tr.span("s", i=i):
+                pass
+        recs = tr.records
+        assert len(recs) == 8
+        assert [r.attrs["i"] for r in recs] == list(range(12, 20))
+
+    def test_threads_nest_independently(self):
+        tr = SpanTracer()
+        done = threading.Event()
+
+        def other():
+            with tr.span("worker_root"):
+                done.wait(5.0)
+
+        t = threading.Thread(target=other)
+        with tr.span("main_root"):
+            t.start()
+            done.set()
+            t.join()
+        by_name = {r.name: r for r in tr.records}
+        # the worker's span is a root on ITS thread, not a child of main
+        assert by_name["worker_root"].parent == -1
+        assert by_name["worker_root"].depth == 0
+        assert by_name["worker_root"].thread_id != \
+            by_name["main_root"].thread_id
+
+    def test_chrome_trace_schema(self, tmp_path):
+        tel = Telemetry(clock=FakeClock(100.0))
+        with tel.span("tile_eval", tile=0):
+            tel.clock.advance(0.010)
+            with tel.span("launch"):
+                tel.clock.advance(0.002)
+        path = tel.export_trace(str(tmp_path / "trace.json"))
+        with open(path) as f:
+            doc = json.load(f)
+        assert doc["displayTimeUnit"] == "ms"
+        meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+        assert meta and meta[0]["args"]["name"] == "repro-campaign"
+        xs = {e["name"]: e for e in doc["traceEvents"] if e["ph"] == "X"}
+        te, la = xs["tile_eval"], xs["launch"]
+        assert te["ts"] == 0.0 and te["dur"] == pytest.approx(12_000)
+        assert la["ts"] == pytest.approx(10_000)
+        assert la["dur"] == pytest.approx(2_000)
+        assert la["args"]["parent"] == te["args"]["sid"]
+        assert la["args"]["depth"] == te["args"]["depth"] + 1
+        assert te["args"]["tile"] == 0
+
+    def test_trace_report_check_passes_and_catches_violations(self, tmp_path):
+        tel = Telemetry()
+        with tel.span("tile_eval"):
+            with tel.span("launch"):
+                pass
+        path = tel.export_trace(str(tmp_path / "t.json"))
+        events = trace_report.load_events(path)
+        assert trace_report.check(events, ["tile_eval"]) == []
+        assert trace_report.check(events, ["lease"]) != []  # missing name
+        bad = [dict(e) for e in events]
+        for e in bad:
+            if e["name"] == "launch":
+                e["args"] = dict(e["args"], depth=5)
+        assert any("depth" in err for err in trace_report.check(bad, []))
+
+    def test_null_span_is_shared_noop(self):
+        tel = NullTelemetry()
+        assert tel.span("anything", tile=1) is NULL_SPAN
+        with tel.span("x"):
+            pass
+        assert tel.tracer.records == []
+        assert tel.tracer.chrome_trace()["traceEvents"] == []
+
+    def test_coerce_telemetry_fresh_per_owner(self):
+        a, b = coerce_telemetry(None), coerce_telemetry(None)
+        assert a is not b                   # per-owner registries: no aliasing
+        t = Telemetry()
+        assert coerce_telemetry(t) is t
+
+
+# --------------------------------------------------- instrumented == plain --
+
+
+class TestInstrumentationIsAReading:
+    def test_instrumented_frontier_bitwise_equals_uninstrumented(self):
+        spec = small_spec()
+        plain = Campaign(WLS, spec, constraint=CONS, evaluator="numpy").run()
+        tel = Telemetry()
+        traced = Campaign(WLS, spec, constraint=CONS, evaluator="numpy",
+                          telemetry=tel).run()
+        for key in plain.frontiers:
+            assert frontiers_identical(plain.frontiers[key],
+                                       traced.frontiers[key])
+        # and the instrumented run actually observed itself
+        assert metric_value(tel.snapshot(), "campaign_tiles_total") == \
+            traced.tiles_done
+        assert any(r.name == "tile_eval" for r in tel.tracer.records)
+
+    def test_nulltelemetry_metrics_still_count(self):
+        # the disabled path keeps REAL counters: fused_launches (back-compat
+        # surface, tests/test_selection.py reads it) must count as before
+        campaign = Campaign(WLS, small_spec(), constraint=CONS,
+                            evaluator="numpy")
+        campaign.run()
+        ev = campaign.engine
+        assert isinstance(ev.telemetry, NullTelemetry)
+        assert metric_value(ev.telemetry.snapshot(),
+                            "evaluator_candidates_total") == \
+            len(WLS) * len(small_spec())
+
+    def test_local_fabric_trace_has_fabric_spans(self, tmp_path):
+        tel = Telemetry()
+        campaign = Campaign(WLS, small_spec(), constraint=CONS,
+                            evaluator="numpy", telemetry=tel)
+        LocalFabric(campaign, n_workers=2, seed=0).run(
+            checkpoint_path=str(tmp_path / "ckpt.json"))
+        names = {r.name for r in tel.tracer.records}
+        assert {"tile_eval", "lease", "deliver", "checkpoint_write"} <= names
+        errors = trace_report.check(
+            trace_report.load_events(
+                tel.export_trace(str(tmp_path / "trace.json"))),
+            trace_report.DEFAULT_REQUIRED)
+        assert errors == []
+
+    def test_multiprocess_workers_ship_metrics_snapshots(self, tmp_path):
+        campaign = Campaign(WLS, small_spec(), constraint=CONS,
+                            evaluator="numpy")
+        fabric = MultiprocessFabric(campaign, n_workers=2)
+        result = fabric.run(checkpoint_path=str(tmp_path / "ckpt.json"))
+        assert result.complete
+        wm = fabric.stats["worker_metrics"]
+        assert set(wm) == {0, 1}
+        total_tiles = sum(
+            metric_value(snap, "worker_tiles_total", default=0)
+            for snap in wm.values())
+        assert total_tiles == campaign.space.n_tiles()
+        for w, snap in wm.items():
+            busy = metric_value(snap, "worker_busy_s_total")
+            assert busy is not None and busy >= 0.0
+            # stats' busy ledger uses the worker-shipped totals
+            assert fabric.stats["worker_busy_s"][w] == busy
