@@ -199,6 +199,60 @@ def feasibility_mask(batch: CandidateBatch, sim: costmodel.SimBatch,
     return ok
 
 
+# Feature layout the adaptive-campaign surrogates train on.  Candidate
+# geometry first, then the chip-table columns the cost model actually
+# consumes — every column is a pure function of the candidate index, so
+# features computed from ``SpaceSpec.slice`` on any host/process are
+# bitwise identical (the property adaptive resume and the distributed
+# adaptive path rely on).
+SURROGATE_FEATURES: Tuple[str, ...] = (
+    "n_chips", "freq_mhz", "mesh_pod", "mesh_data", "mesh_model",
+    "peak_flops_bf16", "hbm_bw", "hbm_bytes", "ici_bw",
+    "tdp_watts", "idle_watts", "ici_hop_s",
+)
+
+_CHIP_FEATURES = SURROGATE_FEATURES[5:]
+
+
+def surrogate_features(batch: CandidateBatch,
+                       table: ChipTable = CHIP_TABLE) -> np.ndarray:
+    """Pack a candidate batch into the ``[N, F]`` float32 feature matrix the
+    adaptive campaign's forests consume (column order =
+    ``SURROGATE_FEATURES``)."""
+    cols = batch.chip_cols if batch.chip_cols is not None \
+        else table.gather(batch.chip_idx)
+    feats = [np.asarray(batch.n_chips, np.float64),
+             np.asarray(batch.freq_mhz, np.float64),
+             np.asarray(batch.pod_axis(), np.float64),
+             np.asarray(batch.mesh_data, np.float64),
+             np.asarray(batch.mesh_model, np.float64)]
+    feats += [np.asarray(cols[f], np.float64) for f in _CHIP_FEATURES]
+    return np.stack(feats, axis=1).astype(np.float32)
+
+
+def predict_tile_scores(energy_model, latency_model, batch: CandidateBatch,
+                        table: ChipTable = CHIP_TABLE
+                        ) -> Tuple[np.ndarray, np.ndarray,
+                                   np.ndarray, np.ndarray]:
+    """Tile-level surrogate scoring entry point: one batched forest inference
+    per model over the whole tile.  Returns ``(e_mu, e_sd, l_mu, l_sd)`` in
+    LOG space (the forests train on log targets).  Models without a
+    ``predict_log_stats`` surface degrade to ``log(predict)`` with zero
+    spread, so point predictors still work (no exploration term)."""
+    X = surrogate_features(batch, table)
+    out = []
+    for model in (energy_model, latency_model):
+        stats = getattr(model, "predict_log_stats", None)
+        if stats is not None:
+            mu, sd = stats(X)
+        else:
+            mu = np.log(np.maximum(np.asarray(model.predict(X), np.float64),
+                                   1e-300))
+            sd = np.zeros_like(mu)
+        out += [np.asarray(mu, np.float64), np.asarray(sd, np.float64)]
+    return out[0], out[1], out[2], out[3]
+
+
 class BatchSearchResults(Mapping):
     """Per-candidate results of a batched sweep, API-compatible with the old
     ``{cand: {"sim": SimResult, "feasible": bool}}`` dict.

@@ -217,18 +217,43 @@ class DecisionTreeRegressor:
 
 @dataclasses.dataclass
 class RandomForestRegressor:
+    """The paper's random forest, extended with a warm-start surface for
+    active-learning loops (``repro.dse_campaign.adaptive``):
+
+    * ``partial_fit`` appends new rows and rebuilds only ``refresh_trees``
+      tree slots per call (cycling through the forest), so per-round refits
+      cost a fraction of a full ``fit`` while every tree eventually sees the
+      accumulated data;
+    * ``predict_log_stats`` exposes the per-tree prediction spread — the
+      forest-variance exploration term of the acquisition function.
+
+    Both are seeded-deterministic: tree slot ``t`` rebuilt on the ``c``-th
+    ``partial_fit`` call draws its bootstrap from ``default_rng((seed, c,
+    t))``, so replaying the same call sequence (same data, same seeds)
+    reproduces the forest bitwise — the property that makes adaptive
+    checkpoint/resume able to reconstruct the surrogate state exactly.
+    """
+
     n_trees: int = 40
     max_depth: int = 12
     min_leaf: int = 2
     feature_frac: float = 0.7
     log_target: bool = True
+    refresh_trees: Optional[int] = None      # per-partial_fit rebuild budget
     _trees: Optional[List[_TreeArrays]] = None
     _stacked: Optional[tuple] = None
+    _X: Optional[np.ndarray] = None          # accumulated warm-start rows
+    _y: Optional[np.ndarray] = None          # (transformed target space)
+    _fit_calls: int = 0
+    _next_slot: int = 0
+
+    def _transform_y(self, y: np.ndarray) -> np.ndarray:
+        return np.log(np.maximum(y, 1e-12)) if self.log_target else y
 
     def fit(self, X, y, seed: int = 0):
         X = np.asarray(X, np.float32)
         y = np.asarray(y, np.float64)
-        yt = np.log(np.maximum(y, 1e-12)) if self.log_target else y
+        yt = self._transform_y(y)
         rng = np.random.default_rng(seed)
         self._trees = []
         n = X.shape[0]
@@ -237,16 +262,81 @@ class RandomForestRegressor:
             self._trees.append(_build_cart(X[boot], yt[boot], self.max_depth,
                                            self.min_leaf, rng, self.feature_frac))
         self._stacked = _stack_trees(self._trees)
+        # a full fit resets the warm-start state (the incremental history is
+        # superseded by the from-scratch forest)
+        self._X, self._y = X, yt
+        self._fit_calls, self._next_slot = 1, 0
         return self
 
-    def predict(self, X):
+    @property
+    def n_rows(self) -> int:
+        """Accumulated training rows (warm-start surface)."""
+        return 0 if self._X is None else int(self._X.shape[0])
+
+    def partial_fit(self, X, y, seed: int = 0):
+        """Warm-start incremental refit: append ``(X, y)`` to the accumulated
+        training set, then rebuild only ``refresh_trees`` tree slots
+        (cyclically; ``None`` rebuilds all) on the FULL accumulated data.
+
+        The first call builds the whole forest.  Each rebuilt slot's
+        bootstrap is drawn from ``default_rng((seed, call_index, slot))`` —
+        independent of which slots any other call rebuilt — so a replayed
+        call sequence reproduces the forest bitwise (tested in
+        ``tests/test_predictors.py``).  Untouched slots keep their exact
+        tree arrays: they were fitted on less data, which is the
+        staleness-for-speed trade the adaptive campaign's per-round refit
+        makes.
+        """
+        X = np.asarray(X, np.float32)
+        yt = self._transform_y(np.asarray(y, np.float64))
+        if X.ndim != 2 or X.shape[0] != yt.shape[0]:
+            raise ValueError(f"partial_fit shapes: X {X.shape} vs y {yt.shape}")
+        if self._X is None:
+            self._X, self._y = X, yt
+        else:
+            if X.shape[1] != self._X.shape[1]:
+                raise ValueError(
+                    f"partial_fit feature width {X.shape[1]} != accumulated "
+                    f"{self._X.shape[1]}")
+            self._X = np.concatenate([self._X, X])
+            self._y = np.concatenate([self._y, yt])
+        n = self._X.shape[0]
+        if self._trees is None:
+            self._trees = [None] * self.n_trees
+            slots = list(range(self.n_trees))               # cold: build all
+        else:
+            k = self.n_trees if self.refresh_trees is None else min(
+                max(int(self.refresh_trees), 1), self.n_trees)
+            slots = [(self._next_slot + i) % self.n_trees for i in range(k)]
+            self._next_slot = (slots[-1] + 1) % self.n_trees
+        for t in slots:
+            rng = np.random.default_rng((seed, self._fit_calls, t))
+            boot = rng.integers(0, n, n)
+            self._trees[t] = _build_cart(self._X[boot], self._y[boot],
+                                         self.max_depth, self.min_leaf, rng,
+                                         self.feature_frac)
+        self._fit_calls += 1
+        self._stacked = _stack_trees(self._trees)
+        return self
+
+    def _tree_preds(self, X) -> jnp.ndarray:
         if self._stacked is None:           # fitted by an older pickle/caller
             self._stacked = _stack_trees(self._trees)
-        preds = _forest_predict_jnp(*self._stacked,
-                                    jnp.asarray(X, jnp.float32),
-                                    max_depth=self.max_depth)
-        p = np.asarray(jnp.mean(preds, axis=0), np.float64)
+        return _forest_predict_jnp(*self._stacked,
+                                   jnp.asarray(X, jnp.float32),
+                                   max_depth=self.max_depth)
+
+    def predict(self, X):
+        p = np.asarray(jnp.mean(self._tree_preds(X), axis=0), np.float64)
         return np.exp(p) if self.log_target else p
+
+    def predict_log_stats(self, X) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-sample (mean, std) over the per-tree predictions, in the
+        model's TRAINING target space (log space when ``log_target``) — the
+        spread is the epistemic-uncertainty reading the adaptive campaign's
+        exploration term consumes.  ``exp(mean)`` equals ``predict``."""
+        preds = np.asarray(self._tree_preds(X), np.float64)   # [T, N]
+        return preds.mean(axis=0), preds.std(axis=0)
 
 
 MODELS = {

@@ -13,13 +13,22 @@ coordinator leases tile indices, workers ship ``TileReduction`` payloads —
 with a frontier bitwise-identical to the single-process run regardless of
 worker count, interleaving, or worker loss.
 
+The ``adaptive`` module turns the sweep into a learned search:
+``AdaptiveCampaign`` evaluates a seed slice exactly, fits surrogate forests
+on it, and spends the rest of a bounded budget (default 10% of the space)
+on the tiles with the highest expected hypervolume gain — same frontiers,
+same checkpoints, same distributed fabric, a fraction of the evaluations.
+
 Every entry point — ``Campaign``, ``TileEvaluator``, ``run_distributed``,
-and the serving layer's ``SelectionEngine`` (``repro.select``) — constructs
-from one frozen ``CampaignConfig``; the pre-config keyword constructors
-still work but emit ``DeprecationWarning``.
+``AdaptiveCampaign``, and the serving layer's ``SelectionEngine``
+(``repro.select``) — constructs from one frozen ``CampaignConfig``; the
+pre-config keyword constructors still work but emit ``DeprecationWarning``.
 """
 
-from repro.dse_campaign.config import EVALUATORS, CampaignConfig
+from repro.dse_campaign.adaptive import (AdaptiveCampaign, AdaptiveResult,
+                                         run_adaptive_distributed)
+from repro.dse_campaign.config import (EVALUATORS, AdaptiveConfig,
+                                       CampaignConfig)
 from repro.dse_campaign.fabric import (FabricCoordinator, FakeClock,
                                        FaultInjection, LeaseBoard,
                                        LocalFabric, MultiprocessFabric,
@@ -30,7 +39,8 @@ from repro.dse_campaign.frontier import (FrontierSnapshot, StreamingFrontier,
                                          candidate_to_dict,
                                          canonical_frontier,
                                          frontiers_identical,
-                                         hypervolume_2d)
+                                         hypervolume_2d,
+                                         hypervolume_gain_2d)
 from repro.dse_campaign.runner import (Campaign, CampaignResult, TileEvaluator,
                                        TileReduction, TileStat)
 from repro.dse_campaign.space import (DEFAULT_VARIANTS, SliceVariant,
@@ -39,6 +49,7 @@ from repro.dse_campaign.space import (DEFAULT_VARIANTS, SliceVariant,
 from repro.dse_campaign import store
 
 __all__ = [
+    "AdaptiveCampaign", "AdaptiveConfig", "AdaptiveResult",
     "Campaign", "CampaignConfig", "CampaignResult", "DEFAULT_VARIANTS",
     "EVALUATORS", "FabricCoordinator", "FakeClock", "FaultInjection",
     "FrontierSnapshot", "LeaseBoard", "LocalFabric", "MultiprocessFabric",
@@ -46,5 +57,6 @@ __all__ = [
     "TileReduction", "TileStat", "campaign_config", "candidate_from_dict",
     "candidate_to_dict", "canonical_frontier", "default_campaign_space",
     "evaluator_from_config", "frontiers_identical", "hypervolume_2d",
-    "run_distributed", "store", "tile_span", "tiny_campaign_space",
+    "hypervolume_gain_2d", "run_adaptive_distributed", "run_distributed",
+    "store", "tile_span", "tiny_campaign_space",
 ]

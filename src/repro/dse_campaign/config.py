@@ -30,6 +30,73 @@ EVALUATORS = ("numpy", "jit", "fast", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    """Knobs of the surrogate-guided adaptive campaign (``adaptive.py``).
+
+    Budgets are fractions of the space's candidate count, rounded up to
+    whole tiles: ``seed_fraction`` is evaluated exactly up front (evenly
+    spaced tiles, so the surrogates see every region of the space),
+    ``round_fraction`` is evaluated per acquisition round, and the loop
+    hard-stops once ``budget_fraction`` has been spent.  ``budget_fraction
+    >= 1`` short-circuits to the exact sweep (bitwise identical — the
+    degenerate-mode gate).
+
+    Acquisition = expected hypervolume gain against the frontier's
+    pinned-ref proxy, computed from LCB-optimistic surrogate predictions
+    (``exp(mu - explore_weight * sigma)``, sigma = per-tree forest spread),
+    with predicted-infeasible candidates screened out.  The loop stops
+    early once the frontier hypervolume has improved by less than
+    ``plateau_tol`` (relative) for ``plateau_rounds`` consecutive rounds.
+
+    ``train_sample`` rows per (workload, tile) are subsampled for surrogate
+    training (seeded by tile index, so any evaluation order yields the same
+    rows); ``n_trees`` / ``refresh_trees`` / ``max_depth`` / ``min_leaf``
+    size the per-target forests — smaller than the offline predictors
+    because they are refit every round.
+    """
+
+    budget_fraction: float = 0.10
+    seed_fraction: float = 0.04
+    round_fraction: float = 0.01
+    explore_weight: float = 1.0
+    plateau_rounds: int = 2
+    plateau_tol: float = 1e-3
+    train_sample: int = 64
+    n_trees: int = 16
+    refresh_trees: int = 8
+    max_depth: int = 10
+    min_leaf: int = 4
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 < self.budget_fraction <= 1.0:
+            raise ValueError("budget_fraction must be in (0, 1]")
+        if not 0.0 < self.seed_fraction:
+            raise ValueError("seed_fraction must be > 0")
+        if not 0.0 < self.round_fraction:
+            raise ValueError("round_fraction must be > 0")
+        if self.explore_weight < 0.0:
+            raise ValueError("explore_weight must be >= 0")
+        if self.plateau_rounds < 1:
+            raise ValueError("plateau_rounds must be >= 1")
+        if self.plateau_tol < 0.0:
+            raise ValueError("plateau_tol must be >= 0")
+        if self.train_sample < 1:
+            raise ValueError("train_sample must be >= 1")
+        if self.n_trees < 1 or self.refresh_trees < 1:
+            raise ValueError("n_trees and refresh_trees must be >= 1")
+        if self.refresh_trees > self.n_trees:
+            raise ValueError("refresh_trees must be <= n_trees")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "AdaptiveConfig":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
 class CampaignConfig:
     """Frozen configuration shared by every campaign/serving entry point.
 
@@ -46,7 +113,10 @@ class CampaignConfig:
     * checkpointing — ``checkpoint_every`` (tiles between saves) and
       ``checkpoint_path`` (default path ``Campaign.run`` persists to);
     * fabric — ``n_workers`` / ``lease_timeout_s`` for
-      ``run_distributed``.
+      ``run_distributed``;
+    * adaptive — an optional ``AdaptiveConfig`` enabling the
+      surrogate-guided campaign mode (``repro.dse_campaign.adaptive``);
+      ``None`` (the default) keeps every entry point on the exact sweep.
 
     The dataclass is frozen so a config can be shared between a campaign,
     its fabric workers and a serving engine without aliasing surprises; use
@@ -66,8 +136,14 @@ class CampaignConfig:
     checkpoint_path: Optional[str] = None
     n_workers: int = 2
     lease_timeout_s: float = 300.0
+    adaptive: Optional[AdaptiveConfig] = None
 
     def __post_init__(self):
+        if self.adaptive is not None and not isinstance(self.adaptive,
+                                                        AdaptiveConfig):
+            raise TypeError(
+                f"CampaignConfig.adaptive must be an AdaptiveConfig, got "
+                f"{type(self.adaptive).__name__}")
         if not isinstance(self.space, SpaceSpec):
             raise TypeError(f"CampaignConfig.space must be a SpaceSpec, got "
                             f"{type(self.space).__name__}")

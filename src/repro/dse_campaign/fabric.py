@@ -55,7 +55,7 @@ import numpy as np
 
 from repro.core import costmodel, dse
 from repro.dse_campaign import store
-from repro.dse_campaign.config import CampaignConfig
+from repro.dse_campaign.config import AdaptiveConfig, CampaignConfig
 from repro.dse_campaign.runner import (Campaign, CampaignResult, TileEvaluator,
                                        TileReduction, TileStat,
                                        workload_from_dict, workload_to_dict)
@@ -121,6 +121,9 @@ def campaign_config(campaign: Union[Campaign, TileEvaluator]) -> Dict:
         "evaluator": eng.evaluator,
         "pipeline": eng.pipeline,
         "max_survivors": eng.max_survivors,
+        # adaptive campaigns need workers to attach the seeded training
+        # subsample to every reduction; exact campaigns ship None
+        "adaptive": eng.adaptive.to_dict() if eng.adaptive else None,
     }
 
 
@@ -148,7 +151,9 @@ def evaluator_from_config(cfg: Dict, telemetry=None) -> TileEvaluator:
             evaluator=cfg["evaluator"],
             sim=costmodel.SimConfig(**cfg["sim"]),
             pipeline=cfg["pipeline"],
-            max_survivors=cfg["max_survivors"]),
+            max_survivors=cfg["max_survivors"],
+            adaptive=(AdaptiveConfig.from_dict(cfg["adaptive"])
+                      if cfg.get("adaptive") else None)),
         telemetry=telemetry)
 
 
@@ -182,6 +187,11 @@ class LeaseBoard:
     * ``revoke_worker`` returns a lost worker's leases to the pending pool;
       nothing is ever lost, so ``all_done`` eventually holds as long as one
       worker survives.
+
+    ``set_priority`` overrides the default smallest-index issue order with
+    an explicit ranking — the adaptive campaign's hook for leasing tiles in
+    acquisition order while keeping every other board invariant (re-pended
+    tiles return at their assigned rank, done tiles never re-issue).
     """
 
     def __init__(self, n_tiles: int, done: Sequence[int] = ()):
@@ -189,16 +199,40 @@ class LeaseBoard:
             raise ValueError("n_tiles must be >= 1")
         self.n_tiles = int(n_tiles)
         self._done = {int(t) for t in done if 0 <= int(t) < n_tiles}
-        self._pending = sorted(set(range(self.n_tiles)) - self._done)
+        self._rank: Dict[int, int] = {}
+        self._pending = [(t, t) for t in
+                         sorted(set(range(self.n_tiles)) - self._done)]
         heapq.heapify(self._pending)
         self._leases: Dict[int, Lease] = {}
         self._prefix = 0
 
+    def _rank_of(self, tile: int) -> int:
+        """Issue rank of ``tile``: its ``set_priority`` position when
+        ranked, else after every ranked tile, in index order (the default
+        board — no ranking — degenerates to rank == index)."""
+        if not self._rank:
+            return tile
+        return self._rank.get(tile, len(self._rank) + tile)
+
+    def set_priority(self, order: Sequence[int]) -> None:
+        """Lease tiles in ``order`` (first element first) ahead of any tile
+        not listed; unlisted tiles keep their relative index order after
+        the listed ones.  Re-heapifies the pending pool; done/leased tiles
+        are unaffected."""
+        self._rank = {int(t): i for i, t in enumerate(order)}
+        if len(self._rank) != len(order):
+            raise ValueError("set_priority order contains duplicate tiles")
+        pending = {t for _, t in self._pending
+                   if t not in self._done and t not in self._leases}
+        self._pending = [(self._rank_of(t), t) for t in pending]
+        heapq.heapify(self._pending)
+
     def next_tile(self, worker: WorkerId, now: float = 0.0) -> Optional[int]:
-        """Lease the smallest pending tile to ``worker`` (``None`` when no
-        tile is pending — outstanding leases may still re-pend later)."""
+        """Lease the lowest-rank pending tile to ``worker`` — smallest index
+        by default, acquisition order after ``set_priority`` (``None`` when
+        no tile is pending — outstanding leases may still re-pend later)."""
         while self._pending:
-            tile = heapq.heappop(self._pending)
+            _, tile = heapq.heappop(self._pending)
             if tile in self._done or tile in self._leases:
                 continue
             self._leases[tile] = Lease(tile, worker, now)
@@ -221,7 +255,7 @@ class LeaseBoard:
         tiles = sorted(t for t, l in self._leases.items() if l.worker == worker)
         for t in tiles:
             del self._leases[t]
-            heapq.heappush(self._pending, t)
+            heapq.heappush(self._pending, (self._rank_of(t), t))
         return tiles
 
     @property
@@ -248,7 +282,7 @@ class LeaseBoard:
     def n_pending(self) -> int:
         """Tiles neither done nor leased (the heap may hold stale entries
         for revoked-then-completed tiles; they are filtered here)."""
-        return len([t for t in self._pending
+        return len([t for _, t in self._pending
                     if t not in self._done and t not in self._leases])
 
     def contiguous_done_prefix(self) -> int:

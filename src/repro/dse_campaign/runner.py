@@ -161,6 +161,15 @@ class TileReduction:
     * it is a pure function of (space, workloads, constraint, sim,
       evaluator) and the tile span — no cross-tile state — which is what
       makes a lost tile safely re-issuable to any other worker.
+
+    Adaptive campaigns additionally carry a seeded training subsample:
+    ``sample_lidx`` (LOCAL indices into the tile, shared by all workloads —
+    candidate features are workload-independent) plus per-workload
+    ``sample_energy`` / ``sample_latency`` rows the surrogates train on.
+    The subsample is seeded by ``(adaptive.seed, lo)``, so it is a pure
+    function of config x span like everything else here — a re-issued or
+    replayed tile yields bitwise-identical training rows on any worker.
+    ``None`` (exact campaigns) keeps the payload unchanged.
     """
 
     lo: int
@@ -171,6 +180,9 @@ class TileReduction:
     n_feasible: Tuple[int, ...]
     ref_energy_j: Tuple[Optional[float], ...]
     ref_latency_s: Tuple[Optional[float], ...]
+    sample_lidx: Optional[np.ndarray] = None
+    sample_energy: Optional[Tuple[np.ndarray, ...]] = None
+    sample_latency: Optional[Tuple[np.ndarray, ...]] = None
 
     @property
     def n_workloads(self) -> int:
@@ -283,6 +295,9 @@ class TileEvaluator:
         self.cycles_model = cfg.cycles_model
         self.pipeline = bool(cfg.pipeline)
         self.max_survivors = int(cfg.max_survivors)
+        self.adaptive = cfg.adaptive
+        self.train_sample = 0 if cfg.adaptive is None \
+            else int(cfg.adaptive.train_sample)
         self.telemetry = coerce_telemetry(telemetry)
         # held series: the hot path pays one attribute read, not a dict hit
         self._c_fused = self.telemetry.counter("evaluator_fused_launches_total")
@@ -402,6 +417,18 @@ class TileEvaluator:
 
     # -- the normalized reduction -------------------------------------------
 
+    def _tile_sample_lidx(self, n: int, lo: int) -> Optional[np.ndarray]:
+        """Seeded training-subsample indices for the tile at ``lo`` (local,
+        sorted, without replacement), or ``None`` when the campaign is not
+        adaptive.  Seeded by ``(adaptive.seed, lo)`` so the draw depends
+        only on config x span — never on which worker or in which round the
+        tile was evaluated."""
+        if self.train_sample <= 0:
+            return None
+        k = min(self.train_sample, n)
+        rng = np.random.default_rng((self.adaptive.seed, lo))
+        return np.sort(rng.choice(n, size=k, replace=False)).astype(np.int64)
+
     @staticmethod
     def _reduce_rows(energy: np.ndarray, latency: np.ndarray,
                      feasible: np.ndarray, lo: int):
@@ -431,9 +458,18 @@ class TileEvaluator:
         non-fused evaluator — is reduced host-side to the exact feasible
         Pareto set instead.  Either way the fold through
         ``StreamingFrontier.merge_reduced`` equals the raw full-tile merge.
+
+        With ``config.adaptive`` set, the reduction additionally carries a
+        seeded per-tile training subsample (see ``TileReduction``); the
+        fused path reads it off the already-materialized full rows, the
+        per-workload path off each workload's evaluation — zero extra
+        launches either way.
         """
         n = len(batch)
         cols = {"gidx": [], "e": [], "l": [], "nf": [], "re": [], "rl": []}
+        lidx = self._tile_sample_lidx(n, lo)
+        samp_e: List[np.ndarray] = []
+        samp_l: List[np.ndarray] = []
 
         def add(gidx, e, l, nf, re, rl):
             cols["gidx"].append(gidx)
@@ -447,6 +483,11 @@ class TileEvaluator:
             red = self.sweep_reduced(batch)
             with self.telemetry.span("compact", n=n):
                 for wi in range(len(self.workloads)):
+                    if lidx is not None:
+                        samp_e.append(np.asarray(
+                            red.energy_full, np.float64)[wi][lidx])
+                        samp_l.append(np.asarray(
+                            red.latency_full, np.float64)[wi][lidx])
                     if red.overflowed(wi):
                         add(*self._reduce_rows(
                             np.asarray(red.energy_full)[wi][:n],
@@ -466,13 +507,19 @@ class TileEvaluator:
                                          workload=f"{wl.arch}|{wl.shape}"):
                     energy, latency, feasible = \
                         self.evaluate_workload(wl, batch)
+                if lidx is not None:
+                    samp_e.append(np.asarray(energy, np.float64)[lidx])
+                    samp_l.append(np.asarray(latency, np.float64)[lidx])
                 with self.telemetry.span("compact", n=n):
                     add(*self._reduce_rows(energy, latency, feasible, lo))
         tr = TileReduction(
             lo=lo, hi=lo + n,
             surv_gidx=tuple(cols["gidx"]), surv_energy=tuple(cols["e"]),
             surv_latency=tuple(cols["l"]), n_feasible=tuple(cols["nf"]),
-            ref_energy_j=tuple(cols["re"]), ref_latency_s=tuple(cols["rl"]))
+            ref_energy_j=tuple(cols["re"]), ref_latency_s=tuple(cols["rl"]),
+            sample_lidx=lidx,
+            sample_energy=tuple(samp_e) if lidx is not None else None,
+            sample_latency=tuple(samp_l) if lidx is not None else None)
         self._c_candidates.inc(n * len(self.workloads))
         self._c_survivors.inc(tr.n_survivors)
         return tr

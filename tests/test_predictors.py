@@ -80,3 +80,97 @@ def test_predictor_scale_monotonicity(a, b):
     lo = X.copy(); lo[:, 0] = 0.7
     hi = X.copy(); hi[:, 0] = 1.8
     assert m.predict(hi).mean() > m.predict(lo).mean()
+
+
+# --- warm-start (partial_fit) forest: incremental refits for the adaptive
+# --- campaign loop -----------------------------------------------------------
+
+
+def _rows(seed, n=60, d=4):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(0.5, 4.0, (n, d)).astype(np.float32)
+    y = 5.0 * X[:, 0] * X[:, 1] ** 2 / X[:, 2] + X[:, 3]
+    return X, y
+
+
+def _warm_forest():
+    return P.RandomForestRegressor(n_trees=8, max_depth=6, min_leaf=2,
+                                   refresh_trees=3, log_target=True)
+
+
+def test_partial_fit_same_call_sequence_is_bitwise_deterministic():
+    Xq = _rows(99)[0][:16]
+    preds = []
+    for _ in range(2):
+        m = _warm_forest()
+        for step, seed in enumerate([7, 11, 13]):
+            m.partial_fit(*_rows(step), seed=seed)
+        preds.append(np.asarray(m.predict(Xq)))
+    np.testing.assert_array_equal(preds[0], preds[1])
+
+
+def test_partial_fit_accumulates_rows_and_cycles_refresh_slots():
+    m = _warm_forest()
+    X0, y0 = _rows(0)
+    m.partial_fit(X0, y0, seed=1)
+    assert m.n_rows == len(X0)
+    cold = [t for t in m._trees]
+    X1, y1 = _rows(1)
+    m.partial_fit(X1, y1, seed=1)
+    assert m.n_rows == len(X0) + len(X1)
+    # exactly refresh_trees slots rebuilt, starting at slot 0
+    changed = [i for i, (a, b) in enumerate(zip(cold, m._trees)) if a is not b]
+    assert changed == [0, 1, 2]
+    warm1 = [t for t in m._trees]
+    m.partial_fit(*_rows(2), seed=1)
+    changed = [i for i, (a, b) in enumerate(zip(warm1, m._trees))
+               if a is not b]
+    assert changed == [3, 4, 5]
+
+
+def test_partial_fit_refreshed_trees_see_new_rows():
+    m = _warm_forest()
+    m.partial_fit(*_rows(0, n=40), seed=5)
+    before = np.asarray(m.predict(_rows(42)[0][:8]))
+    # feed rows from a shifted distribution: refreshed trees must move
+    rng = np.random.default_rng(8)
+    X = rng.uniform(0.5, 4.0, (80, 4)).astype(np.float32)
+    m.partial_fit(X, np.full(80, 1e-3), seed=5)
+    after = np.asarray(m.predict(_rows(42)[0][:8]))
+    assert not np.array_equal(before, after)
+    assert after.mean() < before.mean()
+
+
+def test_fit_resets_warm_state():
+    m = _warm_forest()
+    m.partial_fit(*_rows(0), seed=2)
+    m.partial_fit(*_rows(1), seed=2)
+    X2, y2 = _rows(2)
+    m.fit(X2, y2)
+    assert m.n_rows == len(X2)
+    # next partial_fit behaves like the first warm call again: slot 0 onward
+    cold = [t for t in m._trees]
+    m.partial_fit(*_rows(3), seed=2)
+    changed = [i for i, (a, b) in enumerate(zip(cold, m._trees)) if a is not b]
+    assert changed == [0, 1, 2]
+
+
+def test_predict_log_stats_mean_matches_predict():
+    m = _warm_forest()
+    m.partial_fit(*_rows(4), seed=3)
+    Xq = _rows(5)[0][:24]
+    mu, sd = m.predict_log_stats(Xq)
+    assert mu.shape == sd.shape == (24,)
+    assert np.all(sd >= 0.0)
+    np.testing.assert_allclose(np.exp(mu), np.asarray(m.predict(Xq)),
+                               rtol=1e-5)
+
+
+def test_predict_log_stats_zero_spread_on_duplicate_target():
+    # all-identical targets: every tree predicts the same constant
+    X = _rows(6, n=32)[0]
+    m = _warm_forest()
+    m.partial_fit(X, np.full(32, 7.0), seed=0)
+    mu, sd = m.predict_log_stats(X[:8])
+    np.testing.assert_allclose(mu, np.log(7.0), rtol=1e-6)
+    np.testing.assert_allclose(sd, 0.0, atol=1e-7)
