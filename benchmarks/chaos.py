@@ -1,0 +1,243 @@
+"""Chaos scenario matrix — every fault, one gate: bitwise-identical frontiers.
+
+Runs the fault-free reference campaign on a small synthetic space (no dry-run
+artifacts required, so the gating CI job needs nothing but the repo), then
+replays a matrix of ``ChaosPolicy`` scenarios through ``ChaosRunner`` —
+worker kills, coordinator restarts (recovering from checksummed checkpoints),
+checkpoint bit-flips and truncations, a poison tile, duplicate deliveries,
+slow workers holding leases past expiry, a kitchen-sink combination, and a
+seeded random policy sweep — plus one scenario through the REAL
+``MultiprocessFabric`` (worker crash via ``os._exit`` + poison tile +
+duplicate delivery, with ``RetryPolicy``-paced respawns).
+
+Persists ``BENCH_chaos.json`` (per-scenario identity verdict, fault/recovery
+counts, recovery virtual-seconds, retry counts) BEFORE asserting the gate:
+every scenario's final frontiers must be BITWISE-identical to the fault-free
+single-process run.  Survival is not the bar — exact recovery is.
+
+``--smoke`` runs the three-scenario gating subset (worker kill, coordinator
+restart, corrupt checkpoint) CI blocks on; the full matrix runs in the
+non-gating bench job via ``benchmarks.run``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import tempfile
+import time
+
+from benchmarks.common import OUT_DIR, csv_row
+
+from repro.core import dse
+from repro.dse_campaign import (Campaign, ChaosEvent, ChaosPolicy,
+                                ChaosRunner, FaultInjection, SliceVariant,
+                                SpaceSpec, frontiers_identical,
+                                run_distributed)
+from repro.dse_campaign.config import CampaignConfig
+from repro.runtime.fault_tolerance import RetryPolicy
+
+CHAOS_BENCH_NAME = "BENCH_chaos.json"
+
+BASE = {"flops": 3.2e14, "hbm_bytes": 4.5e13, "collective_bytes": 5e11,
+        "wire_bytes": 7e11}
+WORKLOADS = [
+    dse.Workload("qwen3_14b", "train_4k", BASE, 256, 0.5),
+    dse.Workload("stablelm_1_6b", "serve_2k",
+                 {k: v * 0.3 for k, v in BASE.items()}, 64, 0.2),
+]
+CONSTRAINT = dse.Constraint(max_power_w=50_000)
+N_RANDOM_POLICIES = 3
+
+
+def bench_space() -> SpaceSpec:
+    return SpaceSpec(chips=("tpu-v5e", "tpu-v4", "tpu-edge"),
+                     chip_counts=(16, 64), freq_points=7,
+                     variants=(SliceVariant(), SliceVariant("bin85", 0.85)),
+                     chunk_size=32)
+
+
+def bench_config() -> CampaignConfig:
+    return CampaignConfig(space=bench_space(), constraint=CONSTRAINT)
+
+
+# The named scenario matrix.  ``smoke`` marks the gating CI subset: a worker
+# kill, a coordinator restart, and a restart recovering from a corrupted
+# checkpoint — the three headline failure modes.
+def scenario_matrix(n_tiles: int):
+    return [
+        ("worker_kill", True, ChaosPolicy(events=(
+            ChaosEvent(2, "kill_worker"), ChaosEvent(4, "kill_worker", 1)))),
+        ("coordinator_restart", True, ChaosPolicy(events=(
+            ChaosEvent(3, "restart_coordinator"),))),
+        # corrupt/truncate fire at the SAME completion as the restart (in
+        # authored order): a later checkpoint would overwrite the damage
+        # before anyone reads it, and the quarantine path would never run
+        ("corrupt_checkpoint", True, ChaosPolicy(events=(
+            ChaosEvent(3, "corrupt_checkpoint", 17),
+            ChaosEvent(3, "restart_coordinator")))),
+        ("truncate_checkpoint", False, ChaosPolicy(events=(
+            ChaosEvent(3, "truncate_checkpoint", 10),
+            ChaosEvent(3, "restart_coordinator")))),
+        ("poison_tile", False, ChaosPolicy(poison_tile=2)),
+        ("duplicate_delivery", False, ChaosPolicy(events=(
+            ChaosEvent(2, "duplicate_delivery"),))),
+        ("slow_worker", False, ChaosPolicy(events=(
+            ChaosEvent(2, "slow_worker"),))),
+        ("combined", False, ChaosPolicy(events=(
+            ChaosEvent(1, "kill_worker"),
+            ChaosEvent(3, "corrupt_checkpoint", 5),
+            ChaosEvent(3, "restart_coordinator"),
+            ChaosEvent(4, "slow_worker"),
+            ChaosEvent(5, "duplicate_delivery")), poison_tile=4)),
+    ] + [
+        (f"random_seed{seed}", False,
+         ChaosPolicy.random(seed=seed, n_events=5, horizon=n_tiles))
+        for seed in range(N_RANDOM_POLICIES)
+    ]
+
+
+def run_scenario(name, policy, cfg, ref_frontiers):
+    """One chaos scenario end-to-end; returns its report record."""
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as d:
+        runner = ChaosRunner(WORKLOADS, cfg, policy, n_workers=3)
+        result, report = runner.run(os.path.join(d, "chaos_ckpt.json"))
+    wall_s = time.perf_counter() - t0
+    identical = (set(result.frontiers) == set(ref_frontiers) and all(
+        frontiers_identical(result.frontiers[k], ref_frontiers[k])
+        for k in ref_frontiers))
+    return {
+        "scenario": name,
+        "policy": policy.to_dict(),
+        "identical": identical,
+        "wall_s": wall_s,
+        "virtual_s": report["virtual_s"],
+        "recovery_virtual_s": report["recovery_virtual_s"],
+        "events_fired": len(report["events_fired"]),
+        "kills": report["kills"],
+        "restarts": report["restarts"],
+        "corruptions": report["corruptions"],
+        "truncations": report["truncations"],
+        "slowdowns": report["slowdowns"],
+        "duplicates_injected": report["duplicates_injected"],
+        "duplicates_folded": report["duplicates_folded"],
+        "respawns": report["respawns"],
+        "reissued_tiles": report["reissued_tiles"],
+        "worker_crashes": report["worker_crashes"],
+        "poison_tiles": report["poison_tiles"],
+        "poison_retried": report["poison_retried"],
+        "quarantined_files": report["quarantined_files"],
+        "recoveries": report["recoveries"],
+        "deliveries": report["deliveries"],
+        "n_completions": report["n_completions"],
+    }
+
+
+def run_multiprocess_scenario(cfg, ref_frontiers):
+    """The same invariant through real processes: a worker killed by
+    ``os._exit`` mid-tile plus a poison tile plus a duplicated payload,
+    recovered by ``RetryPolicy``-paced respawns and the poison quarantine."""
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as d:
+        mp_cfg = CampaignConfig(
+            space=cfg.space, constraint=CONSTRAINT, n_workers=2,
+            lease_timeout_s=60.0,
+            checkpoint_path=os.path.join(d, "mp_ckpt.json"))
+        result, stats = run_distributed(
+            WORKLOADS, mp_cfg,
+            fault=FaultInjection(kill_worker=0, kill_after_tiles=1,
+                                 duplicate=True, poison_tile=3),
+            retry=RetryPolicy(base_s=0.05, max_s=0.2, seed=0),
+            max_respawns=4, poison_threshold=2)
+    wall_s = time.perf_counter() - t0
+    identical = (set(result.frontiers) == set(ref_frontiers) and all(
+        frontiers_identical(result.frontiers[k], ref_frontiers[k])
+        for k in ref_frontiers))
+    return {
+        "scenario": "multiprocess_kill_poison_duplicate",
+        "identical": identical,
+        "wall_s": wall_s,
+        "worker_crashes": len(stats["worker_crashes"]),
+        "clean_exits": len(stats["worker_clean_exits"]),
+        "respawns": len(stats["worker_crashes"]),
+        "reissued_tiles": stats["reissued_tiles"],
+        "duplicates_folded": stats["duplicates"],
+        "poison_tiles": stats["poison_tiles"],
+        "poison_retried": stats["poison_retried"],
+        "deliveries": stats["deliveries"],
+    }
+
+
+def run_matrix(smoke: bool = False, multiprocess: bool = True):
+    """Build the reference, replay the matrix, persist BENCH_chaos.json,
+    THEN gate on every scenario being bitwise-identical."""
+    cfg = bench_config()
+    ref = Campaign(WORKLOADS, cfg).run()
+    n_tiles = cfg.resolved_space.n_tiles()
+    records = []
+    for name, in_smoke, policy in scenario_matrix(n_tiles):
+        if smoke and not in_smoke:
+            continue
+        records.append(run_scenario(name, policy, cfg, ref.frontiers))
+    if multiprocess and not smoke:
+        records.append(run_multiprocess_scenario(cfg, ref.frontiers))
+    payload = {
+        "bench": "chaos",
+        "smoke": smoke,
+        "python": platform.python_version(),
+        "n_tiles": n_tiles,
+        "n_scenarios": len(records),
+        "gate": "frontiers bitwise-identical to fault-free run, every scenario",
+        "all_identical": all(r["identical"] for r in records),
+        "scenarios": records,
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out = os.path.join(OUT_DIR, CHAOS_BENCH_NAME)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"[chaos] wrote {out}", file=sys.stderr)
+    # gates AFTER the artifact lands — a failed run still leaves evidence
+    broken = [r["scenario"] for r in records if not r["identical"]]
+    assert not broken, (
+        f"chaos scenarios diverged from the fault-free frontier: {broken}")
+    return payload
+
+
+def rows(payload):
+    for r in payload["scenarios"]:
+        derived = (f"identical={r['identical']}"
+                   f";respawns={r.get('respawns', 0)}"
+                   f";restarts={r.get('restarts', 0)}"
+                   f";reissued={r.get('reissued_tiles', 0)}"
+                   f";poison={len(r.get('poison_tiles', []))}")
+        yield csv_row(f"chaos_{r['scenario']}", r["wall_s"] * 1e6, derived)
+
+
+def run():
+    """benchmarks.run entry point: full matrix, one csv row per scenario."""
+    return list(rows(run_matrix(smoke=False)))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="gating CI subset: worker kill + coordinator "
+                         "restart + corrupt checkpoint")
+    ap.add_argument("--no-multiprocess", action="store_true",
+                    help="skip the real-process scenario")
+    args = ap.parse_args(argv)
+    payload = run_matrix(smoke=args.smoke,
+                         multiprocess=not args.no_multiprocess)
+    print("name,us_per_call,derived")
+    for row in rows(payload):
+        print(row)
+    print(f"[chaos] {payload['n_scenarios']} scenarios, all identical: "
+          f"{payload['all_identical']}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,7 @@ MODULES = [
     ("dse", "benchmarks.dse_speedup"),            # DSE motivation
     ("campaign", "benchmarks.dse_campaign"),      # streaming mega-space sweep
     ("serving", "benchmarks.serving"),            # selection query layer
+    ("chaos", "benchmarks.chaos"),                # fault-recovery identity
     ("offload", "benchmarks.offload_analysis"),   # paper §IV
     ("roofline", "benchmarks.roofline_table"),    # §Roofline generator
     ("kernels", "benchmarks.kernel_bench"),       # Pallas kernels

@@ -29,6 +29,22 @@ def _leaf_paths(tree):
     return flat, treedef
 
 
+def _fsync_dir(d: str) -> None:
+    """fsync a directory so the rename publishing a checkpoint survives power
+    loss (the rename lives in the parent's directory entries, which plain
+    file fsyncs never touch).  Best-effort on filesystems that refuse it."""
+    try:
+        fd = os.open(d or ".", os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
@@ -52,6 +68,7 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None) -> s
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)                       # atomic publish
+    _fsync_dir(ckpt_dir)                        # ... durable, not just atomic
     _gc(ckpt_dir, keep=3)
     return final
 

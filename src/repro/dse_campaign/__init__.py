@@ -27,6 +27,8 @@ pre-config keyword constructors still work but emit ``DeprecationWarning``.
 
 from repro.dse_campaign.adaptive import (AdaptiveCampaign, AdaptiveResult,
                                          run_adaptive_distributed)
+from repro.dse_campaign.chaos import (CHAOS_KINDS, ChaosEvent, ChaosPolicy,
+                                      ChaosRunner)
 from repro.dse_campaign.config import (EVALUATORS, AdaptiveConfig,
                                        CampaignConfig)
 from repro.dse_campaign.fabric import (FabricCoordinator, FakeClock,
@@ -50,7 +52,8 @@ from repro.dse_campaign import store
 
 __all__ = [
     "AdaptiveCampaign", "AdaptiveConfig", "AdaptiveResult",
-    "Campaign", "CampaignConfig", "CampaignResult", "DEFAULT_VARIANTS",
+    "CHAOS_KINDS", "Campaign", "CampaignConfig", "CampaignResult",
+    "ChaosEvent", "ChaosPolicy", "ChaosRunner", "DEFAULT_VARIANTS",
     "EVALUATORS", "FabricCoordinator", "FakeClock", "FaultInjection",
     "FrontierSnapshot", "LeaseBoard", "LocalFabric", "MultiprocessFabric",
     "SliceVariant", "SpaceSpec", "StreamingFrontier", "TileEvaluator",

@@ -60,7 +60,7 @@ from repro.dse_campaign.runner import (Campaign, CampaignResult, TileEvaluator,
                                        TileReduction, TileStat,
                                        workload_from_dict, workload_to_dict)
 from repro.dse_campaign.space import SpaceSpec
-from repro.runtime.fault_tolerance import HeartbeatMonitor
+from repro.runtime.fault_tolerance import HeartbeatMonitor, RetryPolicy
 from repro.telemetry import metric_value
 
 WorkerId = Union[int, str]
@@ -204,6 +204,7 @@ class LeaseBoard:
                          sorted(set(range(self.n_tiles)) - self._done)]
         heapq.heapify(self._pending)
         self._leases: Dict[int, Lease] = {}
+        self._parked: set = set()
         self._prefix = 0
 
     def _rank_of(self, tile: int) -> int:
@@ -233,20 +234,45 @@ class LeaseBoard:
         no tile is pending — outstanding leases may still re-pend later)."""
         while self._pending:
             _, tile = heapq.heappop(self._pending)
-            if tile in self._done or tile in self._leases:
+            if (tile in self._done or tile in self._leases
+                    or tile in self._parked):
                 continue
             self._leases[tile] = Lease(tile, worker, now)
             return tile
         return None
 
     def complete(self, tile: int) -> bool:
-        """Retire ``tile``; ``True`` only for the first completion."""
+        """Retire ``tile``; ``True`` only for the first completion.  A late
+        delivery of a parked (poison-quarantined) tile also completes it —
+        the evidence of poison is worker death, and a delivered reduction is
+        proof the tile evaluated after all."""
         if not 0 <= tile < self.n_tiles:
             raise IndexError(f"tile {tile} outside [0, {self.n_tiles})")
         if tile in self._done:
             return False
         self._done.add(tile)
         self._leases.pop(tile, None)
+        self._parked.discard(tile)
+        return True
+
+    def park(self, tile: int) -> bool:
+        """Quarantine ``tile``: no longer issued by ``next_tile`` until
+        ``unpark``.  Its lease (if any) is dropped.  Returns ``False`` for
+        an already-done or already-parked tile."""
+        if not 0 <= tile < self.n_tiles:
+            raise IndexError(f"tile {tile} outside [0, {self.n_tiles})")
+        if tile in self._done or tile in self._parked:
+            return False
+        self._leases.pop(tile, None)
+        self._parked.add(tile)
+        return True
+
+    def unpark(self, tile: int) -> bool:
+        """Return a parked tile to the pending pool (retry path)."""
+        if tile not in self._parked:
+            return False
+        self._parked.discard(tile)
+        heapq.heappush(self._pending, (self._rank_of(tile), tile))
         return True
 
     def revoke_worker(self, worker: WorkerId) -> List[int]:
@@ -262,6 +288,18 @@ class LeaseBoard:
     def all_done(self) -> bool:
         """True once every tile has completed (leases outstanding or not)."""
         return len(self._done) == self.n_tiles
+
+    @property
+    def all_settled(self) -> bool:
+        """True once every tile is either done or parked — the fabric loop's
+        exit condition when poison tiles are quarantined (they are retried
+        single-process afterwards, outside the worker fleet)."""
+        return len(self._done) + len(self._parked) == self.n_tiles
+
+    @property
+    def parked_tiles(self) -> List[int]:
+        """Sorted poison-quarantined tile indices."""
+        return sorted(self._parked)
 
     @property
     def n_done(self) -> int:
@@ -280,10 +318,11 @@ class LeaseBoard:
 
     @property
     def n_pending(self) -> int:
-        """Tiles neither done nor leased (the heap may hold stale entries
-        for revoked-then-completed tiles; they are filtered here)."""
+        """Tiles neither done, leased nor parked (the heap may hold stale
+        entries for revoked-then-completed tiles; they are filtered here)."""
         return len([t for _, t in self._pending
-                    if t not in self._done and t not in self._leases])
+                    if t not in self._done and t not in self._leases
+                    and t not in self._parked])
 
     def contiguous_done_prefix(self) -> int:
         """First tile index NOT in the done set — the ``next_tile`` a plain
@@ -338,15 +377,25 @@ class FabricCoordinator:
     """
 
     def __init__(self, campaign: Campaign, lease_timeout_s: float = 300.0,
-                 clock=time.monotonic, done_tiles: Sequence[int] = ()):
+                 clock=time.monotonic, done_tiles: Sequence[int] = (),
+                 poison_threshold: int = 3,
+                 parked_tiles: Sequence[int] = ()):
         self.campaign = campaign
         prefix_done = range(campaign.next_tile)
         self.board = LeaseBoard(campaign.space.n_tiles(),
                                 done=[*prefix_done, *done_tiles])
         self.monitor = HeartbeatMonitor([], timeout_s=lease_timeout_s,
                                         clock=clock)
+        if poison_threshold < 1:
+            raise ValueError("poison_threshold must be >= 1")
+        self.poison_threshold = int(poison_threshold)
+        # tile -> distinct workers that died while holding it; at
+        # poison_threshold the tile is quarantined instead of re-issued
+        self._tile_crashes: Dict[int, set] = {}
         self.stats = {"deliveries": 0, "duplicates": 0, "reissued_tiles": 0,
-                      "lost_workers": []}
+                      "lost_workers": [], "worker_crashes": [],
+                      "worker_clean_exits": [], "poison_tiles": [],
+                      "poison_retried": [], "recovery": None}
         # the coordinator shares the campaign's telemetry: one trace file
         # holds the lease/deliver spans AND the evaluation spans
         self.telemetry = campaign.telemetry
@@ -357,22 +406,64 @@ class FabricCoordinator:
         self._c_lost = self.telemetry.counter("fabric_lost_workers_total")
         self._c_expiries = self.telemetry.counter(
             "fabric_lease_expiries_total")
+        self._c_crashed = self.telemetry.counter("fabric_worker_crashed")
+        self._c_clean = self.telemetry.counter("fabric_worker_done")
+        self._c_poison = self.telemetry.counter("fabric_poison_tiles_total")
+        for t in parked_tiles:
+            if self.board.park(int(t)):
+                self.stats["poison_tiles"].append(int(t))
 
     @classmethod
     def from_checkpoint(cls, path: str, lease_timeout_s: float = 300.0,
-                        clock=time.monotonic, **campaign_kwargs
-                        ) -> "FabricCoordinator":
+                        clock=time.monotonic, poison_threshold: int = 3,
+                        **campaign_kwargs) -> "FabricCoordinator":
         """Resume a distributed campaign from a (fabric or single-process)
         checkpoint; out-of-prefix tiles recorded under the ``"fabric"`` key
         are marked done so they are not re-issued.  Leases recorded at
         checkpoint time are NOT restored — a coordinator restart implicitly
-        revokes them, and the tiles simply re-pend."""
-        campaign = Campaign.from_checkpoint(path, **campaign_kwargs)
-        state = store.load_checkpoint(path)
+        revokes them, and the tiles simply re-pend (counted as
+        ``reissued_tiles``).  Parked poison tiles stay parked across the
+        restart.
+
+        The load path is the recovering one: a corrupt checkpoint is
+        quarantined to ``*.corrupt`` and the newest valid generation is used
+        instead; the write-ahead journal is cross-checked, and the full
+        recovery report (file used, quarantined files, journal generation)
+        lands in ``stats["recovery"]``.
+        """
+        state, report = store.load_checkpoint_recovering(path)
+        version = state.get("version")
+        if version != 1:
+            raise ValueError(f"unsupported campaign checkpoint version "
+                             f"{version!r} in {path}")
+        campaign = Campaign.from_state(state, source=path, **campaign_kwargs)
         fabric_state = state.get("fabric") or {}
         done = _expand_intervals(fabric_state.get("done", []))
-        return cls(campaign, lease_timeout_s=lease_timeout_s, clock=clock,
-                   done_tiles=done)
+        parked = fabric_state.get("parked", [])
+        coord = cls(campaign, lease_timeout_s=lease_timeout_s, clock=clock,
+                    done_tiles=done, poison_threshold=poison_threshold,
+                    parked_tiles=parked)
+        journal = store.CheckpointJournal(path)
+        records, torn = journal.records()
+        released = [t for t, _ in fabric_state.get("leases", [])]
+        coord.stats["reissued_tiles"] += len(released)
+        coord._c_reissued.inc(len(released))
+        coord.stats["recovery"] = {
+            "path": report["path"],
+            "quarantined": report["quarantined"],
+            "fallback_generation": report["fallback_generation"],
+            "journal_generation": (int(records[-1]["generation"])
+                                   if records else None),
+            "journal_torn_lines": torn,
+            "released_leases": released,
+            "tiles_done_at_restart": coord.board.n_done,
+        }
+        coord.telemetry.counter("fabric_coordinator_recoveries_total").inc()
+        if report["quarantined"]:
+            coord.telemetry.counter(
+                "fabric_checkpoints_quarantined_total").inc(
+                    len(report["quarantined"]))
+        return coord
 
     # -- the three worker verbs --------------------------------------------
 
@@ -412,16 +503,70 @@ class FabricCoordinator:
                 self._c_duplicates.inc()
             return newly_done
 
-    def worker_lost(self, worker: WorkerId) -> List[int]:
+    def worker_lost(self, worker: WorkerId,
+                    crashed: bool = True) -> List[int]:
         """Declare ``worker`` dead: its leases re-pend for re-issue and it
-        leaves heartbeat monitoring.  Late deliveries from it still fold."""
+        leaves heartbeat monitoring.  Late deliveries from it still fold.
+
+        ``crashed=True`` (death by nonzero exit, chaos kill, or lease
+        expiry) attributes the death to every tile the worker held: a tile
+        that kills ``poison_threshold`` DISTINCT workers is quarantined
+        (parked) instead of re-issued — one poisoned tile must not grind
+        through the whole fleet.  ``crashed=False`` is a clean protocol
+        exit; it re-pends leases without attribution and increments
+        ``fabric_worker_done`` instead of ``fabric_worker_crashed``.
+        """
+        held = [t for t, l in self.board.leases.items() if l.worker == worker]
         tiles = self.board.revoke_worker(worker)
         self.monitor.forget(worker)
         self.stats["reissued_tiles"] += len(tiles)
         self.stats["lost_workers"].append(worker)
         self._c_reissued.inc(len(tiles))
         self._c_lost.inc()
+        if crashed:
+            self.stats["worker_crashes"].append(worker)
+            self._c_crashed.inc()
+            for t in held:
+                culprits = self._tile_crashes.setdefault(t, set())
+                culprits.add(worker)
+                if len(culprits) >= self.poison_threshold:
+                    self.quarantine_tile(t)
+        else:
+            self.stats["worker_clean_exits"].append(worker)
+            self._c_clean.inc()
         return tiles
+
+    def quarantine_tile(self, tile: int) -> bool:
+        """Park a poison tile: no re-issue to the fleet; it is retried once
+        single-process at campaign end (``retry_parked``)."""
+        if not self.board.park(tile):
+            return False
+        self.stats["poison_tiles"].append(tile)
+        self._c_poison.inc()
+        return True
+
+    def retry_parked(self) -> List[int]:
+        """Evaluate every parked tile once, single-process, in the
+        coordinator — the end-of-campaign retry that turns a poison
+        quarantine into either a completed tile or a loud failure in THIS
+        process (debuggable, not a silent frontier gap).  Returns the tiles
+        retried."""
+        engine = self.campaign.engine
+        space = self.campaign.space
+        clock = self.telemetry.clock
+        retried = []
+        for tile in list(self.board.parked_tiles):
+            lo, hi = tile_span(space, tile)
+            t0 = clock()
+            with self.telemetry.span("poison_retry", tile=tile):
+                batch = space.slice(lo, hi, with_candidates=not engine.fused)
+                reduction = engine.reduce_tile(batch, lo)
+            self.board.unpark(tile)
+            self.deliver("__poison_retry__", tile, reduction,
+                         busy_s=clock() - t0)
+            self.stats["poison_retried"].append(tile)
+            retried.append(tile)
+        return retried
 
     def expire(self) -> Dict[WorkerId, List[int]]:
         """Lease-timeout sweep: every worker that has been silent for longer
@@ -445,14 +590,16 @@ class FabricCoordinator:
 
     def state_dict(self) -> Dict:
         """Campaign schema version 1 plus a ``"fabric"`` key (done-tile
-        intervals + outstanding leases); ``next_tile`` is the contiguous done
-        prefix, so plain ``Campaign.from_checkpoint`` also resumes this."""
+        intervals + outstanding leases + parked poison tiles); ``next_tile``
+        is the contiguous done prefix, so plain ``Campaign.from_checkpoint``
+        also resumes this."""
         state = self.campaign.state_dict()
         state["fabric"] = {
             "done": _tile_intervals(self.board.done_tiles),
             "leases": [[l.tile, l.worker] for l in
                        sorted(self.board.leases.values(),
                               key=lambda l: l.tile)],
+            "parked": self.board.parked_tiles,
         }
         return state
 
@@ -480,13 +627,18 @@ class FaultInjection:
     ``kill_after_tiles`` tiles (evaluation started, reduction never ships);
     ``duplicate`` redelivers the first completed payload a second time;
     ``hang_worker`` (``LocalFabric`` + ``FakeClock`` only) takes its lease
-    and never finishes, so only lease-timeout expiry can recover the tile.
+    and never finishes, so only lease-timeout expiry can recover the tile;
+    ``poison_tile`` kills EVERY worker that receives that tile — the
+    coordinator's poison quarantine (park at ``poison_threshold`` distinct
+    deaths, retry single-process at campaign end) is the only way such a
+    run completes.
     """
 
     kill_worker: Optional[int] = None
     kill_after_tiles: int = 1
     duplicate: bool = False
     hang_worker: Optional[int] = None
+    poison_tile: Optional[int] = None
 
 
 # ---------------------------------------------------------------------------
@@ -512,22 +664,30 @@ class LocalFabric:
     def __init__(self, campaign_or_coord: Union[Campaign, FabricCoordinator],
                  n_workers: int = 2, seed: int = 0,
                  lease_timeout_s: float = 1e9, clock=None,
-                 fault: Optional[FaultInjection] = None):
+                 fault: Optional[FaultInjection] = None,
+                 poison_threshold: int = 3,
+                 retry: Optional[RetryPolicy] = None):
         if isinstance(campaign_or_coord, FabricCoordinator):
             self.coord = campaign_or_coord
         else:
             self.coord = FabricCoordinator(
                 campaign_or_coord, lease_timeout_s=lease_timeout_s,
-                clock=clock if clock is not None else FakeClock())
+                clock=clock if clock is not None else FakeClock(),
+                poison_threshold=poison_threshold)
         if n_workers < 1:
             raise ValueError("n_workers must be >= 1")
         self.n_workers = int(n_workers)
         self.seed = int(seed)
         self.fault = fault or FaultInjection()
+        self.retry = retry or RetryPolicy()
         if (self.fault.hang_worker is not None
                 and not hasattr(self.coord.monitor.clock, "advance")):
             raise ValueError("hang_worker injection needs a FakeClock — a "
                              "real clock would spin until wall-clock expiry")
+        if (self.fault.poison_tile is not None
+                and not hasattr(self.coord.monitor.clock, "advance")):
+            raise ValueError("poison_tile injection needs a FakeClock — "
+                             "respawn backoff is paced on the virtual clock")
 
     def run(self, max_completions: Optional[int] = None,
             checkpoint_path: Optional[str] = None) -> CampaignResult:
@@ -550,6 +710,10 @@ class LocalFabric:
         kill_pending = fault.kill_worker is not None
         duplicate_pending = fault.duplicate
         n_completions = 0
+        mclock = coord.monitor.clock  # the virtual clock (FakeClock in tests)
+        respawns: List[Tuple[float, int]] = []  # (due time, new worker id)
+        next_wid = self.n_workers
+        n_respawned = 0
 
         def issue_leases():
             for w in alive:
@@ -562,11 +726,24 @@ class LocalFabric:
         while not coord.all_done:
             if max_completions is not None and n_completions >= max_completions:
                 break
+            if coord.board.all_settled and not respawns:
+                break  # only parked poison tiles remain: retried below
             active = [w for w in holding if w != fault.hang_worker]
             if active:
                 w = active[int(rng.integers(len(active)))]
                 tile = holding.pop(w)
-                if (kill_pending and w == fault.kill_worker
+                if tile == fault.poison_tile:
+                    # poison: whoever touches the tile dies mid-evaluation;
+                    # a replacement spawns after the RetryPolicy backoff on
+                    # the virtual clock (attribution eventually parks it)
+                    alive.remove(w)
+                    coord.worker_lost(w, crashed=True)
+                    respawns.append(
+                        (mclock() + self.retry.backoff_s(n_respawned),
+                         next_wid))
+                    n_respawned += 1
+                    next_wid += 1
+                elif (kill_pending and w == fault.kill_worker
                         and completed[w] >= fault.kill_after_tiles):
                     # dies mid-tile: evaluation started, nothing delivered
                     kill_pending = False
@@ -595,11 +772,18 @@ class LocalFabric:
                 if w in alive:
                     alive.remove(w)
                 holding.pop(w, None)
+            for due, nw in [r for r in respawns if mclock() >= r[0]]:
+                respawns.remove((due, nw))
+                coord.register_worker(nw)
+                alive.append(nw)
+                completed[nw] = 0
             issue_leases()
-            if not coord.all_done and not alive:
+            if not coord.all_done and not alive and not respawns:
                 raise RuntimeError(
                     f"fabric stalled: all workers lost with "
                     f"{coord.board.n_pending} tiles pending")
+        if coord.board.parked_tiles and max_completions is None:
+            coord.retry_parked()
         if checkpoint_path:
             coord.checkpoint(checkpoint_path)
         return coord.result(clock() - t_start)
@@ -640,6 +824,7 @@ def _worker_main(worker_id: int, cfg: Dict, worker_cfg: Dict,
                                   lo)
         result_q.put(("ready", worker_id, None, None, 0.0))
         die_on_nth = (worker_cfg or {}).get("die_on_nth_tile")
+        die_on_tile = (worker_cfg or {}).get("die_on_tile")
         n_received = 0
         while True:
             tile = task_q.get()
@@ -663,6 +848,10 @@ def _worker_main(worker_id: int, cfg: Dict, worker_cfg: Dict,
                     result_q.close()
                     result_q.join_thread()
                     os._exit(40)  # injected crash mid-tile: no result ships
+                if die_on_tile is not None and tile == die_on_tile:
+                    result_q.close()      # poison tile: every worker that
+                    result_q.join_thread()  # receives it dies the same way
+                    os._exit(41)
                 reduction = evaluator.reduce_tile(batch, lo)
             busy = time.process_time() - t0
             c_busy.inc(busy)
@@ -692,7 +881,9 @@ class MultiprocessFabric:
     def __init__(self, campaign: Campaign, n_workers: int = 2,
                  lease_timeout_s: float = 300.0,
                  fault: Optional[FaultInjection] = None,
-                 checkpoint_every: int = 8):
+                 checkpoint_every: int = 8,
+                 retry: Optional[RetryPolicy] = None,
+                 max_respawns: int = 0, poison_threshold: int = 3):
         if n_workers < 1:
             raise ValueError("n_workers must be >= 1")
         self.campaign = campaign
@@ -704,6 +895,12 @@ class MultiprocessFabric:
                              "multiprocess hangs are recovered by the lease "
                              "timeout in real time")
         self.checkpoint_every = max(int(checkpoint_every), 1)
+        # one RetryPolicy carries every time constant of the run: respawn
+        # backoff schedule plus the transport poll/join/drain timeouts that
+        # used to be hard-coded literals scattered through this loop
+        self.retry = retry or RetryPolicy()
+        self.max_respawns = int(max_respawns)
+        self.poison_threshold = int(poison_threshold)
         self.stats: Dict = {}
 
     def run(self, checkpoint_path: Optional[str] = None) -> CampaignResult:
@@ -717,31 +914,47 @@ class MultiprocessFabric:
         single-process run.
         """
         cfg = campaign_config(self.campaign)
-        coord = FabricCoordinator(self.campaign,
-                                  lease_timeout_s=self.lease_timeout_s)
         clock = self.campaign.telemetry.clock
+        # clock audit (PR 10): the coordinator's lease clock IS the telemetry
+        # clock — one injected time source for the whole run, so a FakeClock
+        # drives lease expiry and spans alike
+        coord = FabricCoordinator(self.campaign,
+                                  lease_timeout_s=self.lease_timeout_s,
+                                  clock=clock,
+                                  poison_threshold=self.poison_threshold)
         ctx = mp.get_context("spawn")  # jax is not fork-safe
         result_q = ctx.Queue()
         procs: Dict[int, mp.Process] = {}
         task_qs: Dict[int, object] = {}
-        for w in range(self.n_workers):
-            worker_cfg = {}
-            if self.fault.kill_worker == w:
-                worker_cfg["die_on_nth_tile"] = self.fault.kill_after_tiles + 1
-            task_qs[w] = ctx.Queue()
-            p = ctx.Process(target=_worker_main,
-                            args=(w, cfg, worker_cfg, task_qs[w], result_q),
-                            daemon=True)
-            p.start()
-            procs[w] = p
-
-        busy_s = {w: 0.0 for w in procs}
+        busy_s: Dict[int, float] = {}
         worker_metrics: Dict[int, Dict] = {}
         idle: List[int] = []
         ready: set = set()
         lost: set = set()
         duplicate_pending = self.fault.duplicate
         window_t0: Optional[float] = None
+        # worker respawn: (due time on the injected clock, new worker id);
+        # backoff comes from the shared RetryPolicy, not an ad-hoc sleep
+        pending_respawns: List[Tuple[float, int]] = []
+        n_respawned = 0
+        next_wid = self.n_workers
+
+        def spawn_worker(w: int):
+            worker_cfg = {}
+            if self.fault.kill_worker == w:
+                worker_cfg["die_on_nth_tile"] = self.fault.kill_after_tiles + 1
+            if self.fault.poison_tile is not None:
+                worker_cfg["die_on_tile"] = self.fault.poison_tile
+            task_qs[w] = ctx.Queue()
+            p = ctx.Process(target=_worker_main,
+                            args=(w, cfg, worker_cfg, task_qs[w], result_q),
+                            daemon=True)
+            p.start()
+            procs[w] = p
+            busy_s[w] = 0.0
+
+        for w in range(self.n_workers):
+            spawn_worker(w)
 
         def issue_leases():
             # hold the first lease until every worker is warm (or lost):
@@ -758,27 +971,37 @@ class MultiprocessFabric:
                 idle.pop(0)
                 task_qs[w].put(tile)
 
-        def mark_lost(w: int):
-            nonlocal window_t0
+        def mark_lost(w: int, crashed: bool = True):
+            nonlocal window_t0, n_respawned, next_wid
             lost.add(w)
             if w in idle:
                 idle.remove(w)
-            coord.worker_lost(w)
-            if window_t0 is None and len(ready | lost) == self.n_workers:
+            coord.worker_lost(w, crashed=crashed)
+            if window_t0 is None and len(ready | lost) >= self.n_workers:
                 window_t0 = clock()  # peer died during warm-up
+            if crashed and n_respawned < self.max_respawns:
+                pending_respawns.append(
+                    (clock() + self.retry.backoff_s(n_respawned), next_wid))
+                n_respawned += 1
+                next_wid += 1
 
         try:
             while not coord.all_done:
+                if coord.board.all_settled and not pending_respawns:
+                    break  # only parked poison tiles remain: retried below
                 try:
-                    kind, w, tile, payload, t = result_q.get(timeout=0.05)
+                    kind, w, tile, payload, t = result_q.get(
+                        timeout=self.retry.poll_s)
                 except queue_mod.Empty:
                     kind = None
                 if kind == "ready":
                     coord.register_worker(w)
                     idle.append(w)
                     ready.add(w)
-                    if len(ready | lost) == self.n_workers:
-                        window_t0 = clock()
+                    if len(ready | lost) >= self.n_workers:
+                        if window_t0 is None:
+                            window_t0 = clock()
+                        issue_leases()
                 elif kind == "metrics":
                     worker_metrics[w] = payload
                 elif kind == "result":
@@ -796,12 +1019,22 @@ class MultiprocessFabric:
                     raise RuntimeError(f"fabric worker {w} failed: {payload}")
                 for w2, p in procs.items():
                     if w2 not in lost and not p.is_alive():
-                        mark_lost(w2)
+                        # the exit code tells crash (nonzero: chaos kill,
+                        # poison tile, hard fault) from clean protocol exit
+                        mark_lost(w2, crashed=(p.exitcode is None
+                                               or p.exitcode != 0))
                 for w2 in coord.expire():
                     if w2 not in lost:
                         mark_lost(w2)
+                for due, nw in [r for r in pending_respawns
+                                if clock() >= r[0]]:
+                    pending_respawns.remove((due, nw))
+                    spawn_worker(nw)
+                    self.campaign.telemetry.counter(
+                        "fabric_worker_respawns_total").inc()
                 issue_leases()
-                if not coord.all_done and len(lost) == len(procs):
+                if (not coord.all_done and not coord.board.all_settled
+                        and len(lost) == len(procs) and not pending_respawns):
                     raise RuntimeError(
                         f"fabric stalled: all {len(procs)} workers lost with "
                         f"{coord.board.n_pending} tiles pending")
@@ -813,19 +1046,37 @@ class MultiprocessFabric:
                     except Exception:
                         pass
             for p in procs.values():
-                p.join(timeout=5)
+                p.join(timeout=self.retry.join_timeout_s)
                 if p.is_alive():
                     p.terminate()
+            # shutdown exit-code audit: workers that were never declared
+            # lost mid-run still report how they ended — 0 is a clean
+            # protocol exit (fabric_worker_done), anything else (including
+            # a terminate() after a wedged join) counts as a crash
+            for w, p in procs.items():
+                if w in lost or p.exitcode is None:
+                    continue
+                if p.exitcode == 0:
+                    coord.stats["worker_clean_exits"].append(w)
+                    coord._c_clean.inc()
+                else:
+                    coord.stats["worker_crashes"].append(w)
+                    coord._c_crashed.inc()
             # drain the terminal payloads: each clean-shutdown worker
             # answers its None with a ("metrics", ...) snapshot (a crashed
             # worker never does — its entry is simply absent)
             while True:
                 try:
-                    kind, w, tile, payload, t = result_q.get(timeout=0.2)
+                    kind, w, tile, payload, t = result_q.get(
+                        timeout=self.retry.drain_timeout_s)
                 except queue_mod.Empty:
                     break
                 if kind == "metrics":
                     worker_metrics[w] = payload
+        if coord.board.parked_tiles:
+            # poison tiles: one single-process retry in THIS process — a
+            # genuinely broken tile now raises here with a real traceback
+            coord.retry_parked()
         window_s = clock() - window_t0 if window_t0 is not None else 0.0
         if checkpoint_path:
             coord.checkpoint(checkpoint_path)
@@ -852,6 +1103,8 @@ class MultiprocessFabric:
 
 def run_distributed(workloads_or_campaign, config: CampaignConfig = None,
                     fault: Optional[FaultInjection] = None,
+                    retry: Optional[RetryPolicy] = None,
+                    max_respawns: int = 0, poison_threshold: int = 3,
                     **legacy) -> Tuple[CampaignResult, Dict]:
     """One-call distributed sweep; returns ``(CampaignResult, fabric stats)``.
 
@@ -897,6 +1150,8 @@ def run_distributed(workloads_or_campaign, config: CampaignConfig = None,
         cfg = config
     fabric = MultiprocessFabric(campaign, n_workers=cfg.n_workers,
                                 lease_timeout_s=cfg.lease_timeout_s,
-                                fault=fault)
+                                fault=fault, retry=retry,
+                                max_respawns=max_respawns,
+                                poison_threshold=poison_threshold)
     result = fabric.run(checkpoint_path=cfg.checkpoint_path)
     return result, fabric.stats

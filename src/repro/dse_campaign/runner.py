@@ -661,12 +661,27 @@ class Campaign:
         tiles the fabric already folded re-merge as exact no-ops (span
         idempotence), so a single-process resume still converges to the
         same frontier.
+
+        Corrupt checkpoints do not crash the resume: ``store.load_checkpoint``
+        verifies the integrity CRC, quarantines a bad file to ``*.corrupt``
+        and falls back to the newest valid generation (see
+        ``docs/resilience.md``); only when no copy on disk verifies does a
+        ``CheckpointCorruptionError`` surface.
         """
         state = store.load_checkpoint(path)
+        return cls.from_state(state, source=path, **kwargs)
+
+    @classmethod
+    def from_state(cls, state: Dict, source: str = "<state>",
+                   **kwargs) -> "Campaign":
+        """Rebuild a campaign from an already-loaded ``state_dict`` (the
+        verified-load half of ``from_checkpoint`` — callers that need the
+        corruption-recovery report use ``store.load_checkpoint_recovering``
+        and hand the state here)."""
         ckpt_model = state.get("sim_model_version")
         if ckpt_model != costmodel.SIM_MODEL_VERSION:
             raise ValueError(
-                f"checkpoint {path} was written under cost-model version "
+                f"checkpoint {source} was written under cost-model version "
                 f"{ckpt_model!r} but this build is "
                 f"{costmodel.SIM_MODEL_VERSION}; resuming would splice two "
                 "incomparable cost models into one frontier.  To upgrade, "
@@ -690,7 +705,7 @@ class Campaign:
             unknown = set(kwargs) - {f.name for f in
                                      dataclasses.fields(CampaignConfig)}
             if unknown:
-                raise TypeError(f"from_checkpoint: unexpected keyword "
+                raise TypeError(f"from_state: unexpected keyword "
                                 f"arguments {sorted(unknown)}")
             cfg = cfg.replace(**kwargs)
         camp = cls(workloads, cfg, telemetry=telemetry)

@@ -12,15 +12,87 @@ Mechanisms (all host-side, unit-testable, wired into launch/train.py):
     (maintenance-event behaviour on TPU pods).
   * recoverable_step — retries a step through jax transient errors after
     device reset, the restart half of checkpoint/restart.
+  * RetryPolicy — the one retry/backoff schedule shared by every layer that
+    retries (fabric worker respawn, lease-expiry sweeps, chaos recovery):
+    bounded exponential backoff with deterministic jitter, all timing off an
+    injected clock/sleep so tests and chaos runs never wall-sleep.
 """
 
 from __future__ import annotations
 
 import collections
+import dataclasses
+import random
 import signal
 import statistics
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded exponential backoff with deterministic jitter.
+
+    ``backoff_s(attempt)`` = ``min(base_s * multiplier**attempt, max_s)``
+    scaled by a jitter factor drawn uniformly from ``[1 - jitter_frac,
+    1 + jitter_frac]``.  The jitter rng is seeded from ``(seed, attempt)``
+    (integer mix, no process-salted hashing), so the same policy produces
+    the same schedule in every process and every run — chaos scenarios stay
+    bit-reproducible while still desynchronizing real fleets.
+
+    The transport timeouts the ``MultiprocessFabric`` used to hard-code
+    live here too (``poll_s`` result-queue poll, ``join_timeout_s`` worker
+    shutdown, ``drain_timeout_s`` result drain), so one policy object
+    describes every time constant a fabric run uses.
+    """
+
+    base_s: float = 0.05
+    multiplier: float = 2.0
+    max_s: float = 2.0
+    jitter_frac: float = 0.1
+    max_attempts: int = 5
+    seed: int = 0
+    poll_s: float = 0.05
+    join_timeout_s: float = 5.0
+    drain_timeout_s: float = 0.2
+
+    def __post_init__(self):
+        if self.base_s <= 0:
+            raise ValueError("base_s must be > 0")
+        if self.multiplier < 1.0:
+            raise ValueError("multiplier must be >= 1")
+        if self.max_s < self.base_s:
+            raise ValueError("max_s must be >= base_s")
+        if not 0.0 <= self.jitter_frac < 1.0:
+            raise ValueError("jitter_frac must be in [0, 1)")
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+
+    def backoff_s(self, attempt: int) -> float:
+        """Backoff before retry ``attempt`` (0-based), jittered, bounded by
+        ``max_s * (1 + jitter_frac)``."""
+        raw = min(self.base_s * self.multiplier ** attempt, self.max_s)
+        rng = random.Random(self.seed * 1_000_003 + attempt)
+        return raw * (1.0 + self.jitter_frac * (2.0 * rng.random() - 1.0))
+
+    def schedule(self) -> Tuple[float, ...]:
+        """The full backoff schedule, one entry per allowed retry."""
+        return tuple(self.backoff_s(a) for a in range(self.max_attempts))
+
+    def call(self, fn: Callable, *, sleep: Callable[[float], None] = time.sleep,
+             retry_on: Tuple[type, ...] = (Exception,)):
+        """Run ``fn()`` with up to ``max_attempts`` tries.
+
+        ``sleep`` is injected (a FakeClock advance in tests, ``time.sleep``
+        in production) so retrying code never hard-codes wall sleeps.
+        """
+        for attempt in range(self.max_attempts):
+            try:
+                return fn()
+            except retry_on:
+                if attempt == self.max_attempts - 1:
+                    raise
+                sleep(self.backoff_s(attempt))
 
 
 class HeartbeatMonitor:

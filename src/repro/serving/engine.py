@@ -215,6 +215,11 @@ class SelectionAnswer:
     exactly (``None`` for index hits and predictor-only answers) — a
     standalone mini-campaign on the same slice reproduces ``frontier()``
     bitwise.
+
+    ``degraded_reason`` stamps WHY a ``predictor_only`` answer degraded:
+    ``"deadline"`` (budget triage), ``"circuit_open"`` (the mini-campaign
+    circuit breaker is cooling down) or ``"mini_campaign_error"`` (the exact
+    sweep raised and the engine fell back).  ``None`` on exact answers.
     """
 
     qid: int
@@ -228,6 +233,7 @@ class SelectionAnswer:
     frontier_latency_s: np.ndarray
     frontier_indices: np.ndarray
     verified_gidx: Optional[np.ndarray] = None
+    degraded_reason: Optional[str] = None
 
     def frontier(self) -> _dse.ParetoFrontier:
         """The answer's frontier in ``dse.ParetoFrontier`` form (exact for
@@ -240,6 +246,62 @@ class SelectionAnswer:
             latency_s=np.asarray(self.frontier_latency_s, np.float64),
             indices=np.asarray(self.frontier_indices, np.int64),
             feasible_count=int(self.feasible_count))
+
+
+class CircuitBreaker:
+    """Mini-campaign circuit breaker: closed → open → half-open.
+
+    ``record_failure`` counts consecutive exact-path failures (exceptions
+    or deadline overruns); at ``fail_threshold`` the breaker OPENS and
+    ``allow()`` refuses the exact path until ``cooldown_s`` has elapsed on
+    the injected clock.  The first ``allow()`` after cooldown transitions to
+    HALF-OPEN and admits one probe: success closes the breaker, failure
+    re-opens it for another full cooldown.  All transitions are reported
+    through ``on_transition`` (the engine counts them in telemetry); the
+    breaker itself never sleeps and never reads a wall clock directly, so
+    chaos tests drive it entirely through a ``FakeClock``.
+    """
+
+    def __init__(self, fail_threshold: int = 3, cooldown_s: float = 30.0,
+                 clock=time.monotonic, on_transition=None):
+        if fail_threshold < 1:
+            raise ValueError("fail_threshold must be >= 1")
+        if cooldown_s < 0:
+            raise ValueError("cooldown_s must be >= 0")
+        self.fail_threshold = int(fail_threshold)
+        self.cooldown_s = float(cooldown_s)
+        self.clock = clock
+        self.on_transition = on_transition
+        self.state = "closed"
+        self.failures = 0
+        self.opened_at: Optional[float] = None
+
+    def _transition(self, state: str) -> None:
+        if state == self.state:
+            return
+        old, self.state = self.state, state
+        if self.on_transition is not None:
+            self.on_transition(old, state)
+
+    def allow(self) -> bool:
+        """Whether the exact path may run now (may flip open → half-open)."""
+        if self.state == "open":
+            if self.clock() - self.opened_at >= self.cooldown_s:
+                self._transition("half_open")
+                return True
+            return False
+        return True
+
+    def record_success(self) -> None:
+        self.failures = 0
+        if self.state != "closed":
+            self._transition("closed")
+
+    def record_failure(self) -> None:
+        self.failures += 1
+        if self.state == "half_open" or self.failures >= self.fail_threshold:
+            self.opened_at = self.clock()
+            self._transition("open")
 
 
 class SelectionEngine:
@@ -275,7 +337,9 @@ class SelectionEngine:
 
     def __init__(self, index: FrontierIndex, config: CampaignConfig = None,
                  top_k: int = 5, match_rtol: float = 1e-9,
-                 verify_top: int = 256, telemetry=None):
+                 verify_top: int = 256, telemetry=None,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 30.0):
         if config is None:
             config = self._config_from_index(index)
         elif not isinstance(config, CampaignConfig):
@@ -296,9 +360,24 @@ class SelectionEngine:
         self._g_ema = self.telemetry.gauge("selection_deadline_ema_s")
         self.stats: Dict[str, int] = {p: 0 for p in PROVENANCES}
         self.stats["queries"] = 0
+        self.stats["degraded"] = 0
+        self.stats["breaker_opens"] = 0
         self._next_qid = 0
         self._exact_ema_s: Optional[float] = None
         self._full_batch: Optional[_dse.CandidateBatch] = None
+        self._g_breaker = self.telemetry.gauge("selection_breaker_open")
+        self._g_breaker.set(0.0)
+        self.breaker = CircuitBreaker(
+            fail_threshold=breaker_threshold,
+            cooldown_s=breaker_cooldown_s, clock=self._clock,
+            on_transition=self._on_breaker_transition)
+
+    def _on_breaker_transition(self, old: str, new: str) -> None:
+        self.telemetry.counter("selection_breaker_transitions_total",
+                               to=new).inc()
+        self._g_breaker.set(1.0 if new == "open" else 0.0)
+        if new == "open":
+            self.stats["breaker_opens"] += 1
 
     @property
     def fused_launches(self) -> int:
@@ -367,7 +446,14 @@ class SelectionEngine:
         for q in novel:
             if self._must_degrade(q):
                 with tel.span("predictor_only", qid=q.qid):
-                    answers[q.qid] = self._answer_predictor_only(q)
+                    answers[q.qid] = self._answer_predictor_only(
+                        q, reason="deadline")
+            elif self._has_models and not self.breaker.allow():
+                # breaker open: the exact path has been failing; serve
+                # predictor-ranked answers until the cooldown probe closes it
+                with tel.span("predictor_only", qid=q.qid):
+                    answers[q.qid] = self._answer_predictor_only(
+                        q, reason="circuit_open")
             else:
                 exact.append(q)
         groups: Dict[Tuple, List[SelectionQuery]] = {}
@@ -377,11 +463,35 @@ class SelectionEngine:
                 []).append(q)
         for group in groups.values():
             t0 = self._clock()
-            with tel.span("mini_campaign", n_queries=len(group)):
-                fronts, gidx = self._mini_campaign(
-                    [q.workload for q in group],
-                    self._query_constraint(group[0]))
+            try:
+                with tel.span("mini_campaign", n_queries=len(group)):
+                    fronts, gidx = self._mini_campaign(
+                        [q.workload for q in group],
+                        self._query_constraint(group[0]))
+            except Exception:
+                self.breaker.record_failure()
+                tel.counter("selection_minicampaign_failures_total").inc()
+                if not self._has_models:
+                    raise      # no degraded answer is possible: surface it
+                for q in group:
+                    with tel.span("predictor_only", qid=q.qid):
+                        answers[q.qid] = self._answer_predictor_only(
+                            q, reason="mini_campaign_error")
+                continue
             dt = self._clock() - t0
+            if self._has_models:
+                # a sweep that blew through a caller's deadline counts as a
+                # breaker failure even though it produced exact answers —
+                # repeated overruns should trip to predictor-only, not keep
+                # serving late exact answers
+                blown = [q for q in group if q.deadline_s is not None
+                         and self._clock() - q.submitted_s > q.deadline_s]
+                if blown:
+                    self.breaker.record_failure()
+                    tel.counter(
+                        "selection_minicampaign_timeouts_total").inc()
+                else:
+                    self.breaker.record_success()
             self._exact_ema_s = (dt if self._exact_ema_s is None
                                  else 0.5 * (self._exact_ema_s + dt))
             self._g_ema.set(self._exact_ema_s)
@@ -487,7 +597,8 @@ class SelectionEngine:
             self._full_space_batch(), constraint)
         return energy, latency, feasible
 
-    def _answer_predictor_only(self, q: SelectionQuery) -> SelectionAnswer:
+    def _answer_predictor_only(self, q: SelectionQuery,
+                               reason: str = "deadline") -> SelectionAnswer:
         t0 = self._clock()
         constraint = self._query_constraint(q)
         energy, latency, feasible = self._predict(q.workload, constraint)
@@ -501,9 +612,14 @@ class SelectionEngine:
             latency_s=np.asarray(latency, np.float64)[loc],
             indices=loc.astype(np.int64),
             feasible_count=int(np.asarray(feasible, bool).sum()))
-        return self._answer_from_frontier(
+        answer = self._answer_from_frontier(
             q, front, "predictor_only", self._clock() - t0,
             exact=False)
+        answer.degraded_reason = reason
+        self.stats["degraded"] += 1
+        self.telemetry.counter("selection_degraded_total",
+                               reason=reason).inc()
+        return answer
 
     def _candidate_slice(self, workloads: Sequence[_dse.Workload],
                          constraint: _dse.Constraint) -> np.ndarray:

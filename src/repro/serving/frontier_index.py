@@ -225,7 +225,8 @@ class FrontierIndex:
 
     def save(self, path: str) -> str:
         """Persist atomically (tmp + fsync + rename, like checkpoints)."""
-        return store.atomic_write_json(self.to_dict(), path)
+        store.atomic_write_json(self.to_dict(), path)
+        return path
 
     @classmethod
     def from_dict(cls, d: Dict) -> "FrontierIndex":

@@ -1,0 +1,510 @@
+"""Resilience-layer tests: checksummed/journaled checkpoints (corrupt-and-
+recover property — any byte flipped or truncated, resume still equals fresh
+bitwise), RetryPolicy backoff determinism, poison-tile quarantine, coordinator
+crash-recovery from the journal, the serving circuit breaker under a fake
+clock, and the chaos harness itself."""
+
+import json
+import os
+import zlib
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised on bare installs
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import dse
+from repro.dse_campaign import (Campaign, ChaosEvent, ChaosPolicy,
+                                ChaosRunner, FabricCoordinator, FakeClock,
+                                FaultInjection, LeaseBoard, LocalFabric,
+                                SliceVariant, SpaceSpec, frontiers_identical,
+                                run_distributed, store)
+from repro.dse_campaign.chaos import _corrupt_file, _truncate_file
+from repro.dse_campaign.config import CampaignConfig
+from repro.runtime.fault_tolerance import RetryPolicy
+from repro.serving.engine import CircuitBreaker
+from repro.telemetry import metric_value
+
+BASE = {"flops": 3.2e14, "hbm_bytes": 4.5e13, "collective_bytes": 5e11,
+        "wire_bytes": 7e11}
+WLS = [dse.Workload("qwen3_14b", "train_4k", BASE, 256, 0.5),
+       dse.Workload("stablelm_1_6b", "serve_2k",
+                    {k: v * 0.3 for k, v in BASE.items()}, 64, 0.2)]
+CONS = dse.Constraint(max_power_w=50_000)
+
+
+def small_spec(**kw):
+    kw.setdefault("chips", ("tpu-v5e", "tpu-v4", "tpu-edge"))
+    kw.setdefault("chip_counts", (16, 64))
+    kw.setdefault("freq_points", 7)
+    kw.setdefault("variants", (SliceVariant(), SliceVariant("bin85", 0.85)))
+    kw.setdefault("chunk_size", 32)
+    return SpaceSpec(**kw)
+
+
+def campaign(**kw):
+    spec = kw.pop("spec", None) or small_spec()
+    return Campaign(WLS, spec, constraint=CONS, **kw)
+
+
+def assert_identical_frontiers(a, b):
+    assert set(a) == set(b)
+    for key in a:
+        assert frontiers_identical(a[key], b[key]), key
+
+
+@pytest.fixture(scope="module")
+def fresh_result():
+    """The fault-free reference every recovery path must reproduce."""
+    return campaign().run()
+
+
+# --- RetryPolicy: bounded backoff, deterministic jitter -----------------------
+
+
+def test_retry_backoff_bounded_and_growing():
+    p = RetryPolicy(base_s=0.1, multiplier=2.0, max_s=1.0, jitter_frac=0.2,
+                    max_attempts=8)
+    sched = p.schedule()
+    assert len(sched) == 8
+    for a, s in enumerate(sched):
+        raw = min(0.1 * 2.0 ** a, 1.0)
+        assert raw * 0.8 <= s <= raw * 1.2
+    # capped tail: every late attempt within jitter of max_s
+    assert all(0.8 <= s <= 1.2 for s in sched[4:])
+
+
+def test_retry_jitter_deterministic_across_instances():
+    a = RetryPolicy(seed=7).schedule()
+    b = RetryPolicy(seed=7).schedule()
+    assert a == b
+    c = RetryPolicy(seed=8).schedule()
+    assert a != c  # different seed, different jitter
+    # jitter actually varies by attempt (not one constant factor)
+    p = RetryPolicy(base_s=1.0, multiplier=1.0, max_s=1.0, jitter_frac=0.5)
+    sched = p.schedule()
+    assert len(set(sched)) > 1
+
+
+def test_retry_zero_jitter_is_exact():
+    p = RetryPolicy(base_s=0.5, multiplier=2.0, max_s=4.0, jitter_frac=0.0,
+                    max_attempts=5)
+    assert p.schedule() == (0.5, 1.0, 2.0, 4.0, 4.0)
+
+
+def test_retry_call_uses_injected_sleep_and_reraises():
+    p = RetryPolicy(base_s=0.5, multiplier=2.0, max_s=4.0, jitter_frac=0.0,
+                    max_attempts=3)
+    sleeps, calls = [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("transient")
+        return "ok"
+
+    assert p.call(flaky, sleep=sleeps.append, retry_on=(OSError,)) == "ok"
+    assert sleeps == [0.5, 1.0]  # no wall sleeping, schedule respected
+
+    sleeps.clear()
+    with pytest.raises(OSError):
+        p.call(lambda: (_ for _ in ()).throw(OSError("always")),
+               sleep=sleeps.append, retry_on=(OSError,))
+    assert len(sleeps) == 2  # max_attempts - 1 backoffs, then re-raise
+
+    with pytest.raises(ValueError):  # non-matching exception: no retry
+        p.call(lambda: (_ for _ in ()).throw(ValueError("bug")),
+               sleep=sleeps.append, retry_on=(OSError,))
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(base_s=0.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(multiplier=0.5)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_s=0.01, base_s=0.05)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter_frac=1.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+
+
+# --- store: checksums, journal, generations, quarantine -----------------------
+
+
+def _state(n=1, extra=0.0):
+    return {"version": 1, "next_tile": n, "payload": [extra, n * 2]}
+
+
+def test_atomic_write_json_returns_bytes_written(tmp_path):
+    path = str(tmp_path / "x.json")
+    n = store.atomic_write_json({"a": 1}, path)
+    assert n == os.path.getsize(path) > 0
+    assert json.load(open(path)) == {"a": 1}
+
+
+def test_save_checkpoint_stamps_integrity_and_journal(tmp_path):
+    path = str(tmp_path / "ckpt.json")
+    store.save_checkpoint(_state(1), path)
+    on_disk = json.load(open(path))
+    env = on_disk[store.INTEGRITY_KEY]
+    assert env["generation"] == 1 and env["algo"] == "crc32/json-c14n"
+    body = {k: v for k, v in on_disk.items() if k != store.INTEGRITY_KEY}
+    crc = zlib.crc32(json.dumps(body, sort_keys=True,
+                                separators=(",", ":")).encode())
+    assert env["crc32"] == crc
+    records, torn = store.CheckpointJournal(path).records()
+    assert torn == 0 and [r["generation"] for r in records] == [1]
+    assert records[0]["crc32"] == crc
+
+
+def test_generation_retention_keeps_last_k(tmp_path):
+    path = str(tmp_path / "ckpt.json")
+    for i in range(1, 6):
+        store.save_checkpoint(_state(i), path, keep=3)
+    gens = [g for g, _ in store.generation_paths(path)]
+    assert gens == [3, 4, 5]
+    # journal remembers the full history even after pruning
+    records, torn = store.CheckpointJournal(path).records()
+    assert torn == 0 and [r["generation"] for r in records] == [1, 2, 3, 4, 5]
+    assert store.load_checkpoint(path)["next_tile"] == 5
+
+
+def test_journal_skips_torn_lines(tmp_path):
+    path = str(tmp_path / "ckpt.json")
+    store.save_checkpoint(_state(1), path)
+    store.save_checkpoint(_state(2), path)
+    with open(path + ".journal", "a") as f:
+        f.write('deadbeef {"generation": 99, "torn')  # no newline, bad json
+    records, torn = store.CheckpointJournal(path).records()
+    assert [r["generation"] for r in records] == [1, 2]
+    assert torn == 1
+
+
+def test_corrupt_canonical_quarantines_and_falls_back(tmp_path):
+    path = str(tmp_path / "ckpt.json")
+    for i in range(1, 4):
+        store.save_checkpoint(_state(i), path)
+    with open(path, "r+b") as f:  # flip a byte inside the payload
+        raw = f.read()
+        pos = raw.index(b'"next_tile"') + 13
+        f.seek(pos)
+        f.write(bytes([raw[pos] ^ 0xFF]))
+    state, report = store.load_checkpoint_recovering(path)
+    assert state["next_tile"] == 3  # newest generation file, same content
+    assert report["quarantined"] == [path + ".corrupt"]
+    assert os.path.exists(path + ".corrupt")
+    assert report["fallback_generation"] == 3
+
+
+def test_corruption_cascade_falls_back_generation_by_generation(tmp_path):
+    path = str(tmp_path / "ckpt.json")
+    for i in range(1, 4):
+        store.save_checkpoint(_state(i), path)
+    _truncate_file(path, 7)
+    gens = dict((g, p) for g, p in store.generation_paths(path))
+    _corrupt_file(gens[3], 40)
+    state, report = store.load_checkpoint_recovering(path)
+    assert state["next_tile"] == 2
+    assert report["fallback_generation"] == 2
+    assert len(report["quarantined"]) == 2
+
+
+def test_all_corrupt_raises_corruption_error(tmp_path):
+    path = str(tmp_path / "ckpt.json")
+    store.save_checkpoint(_state(1), path, keep=1)
+    _truncate_file(path, 3)
+    for _, p in store.generation_paths(path):
+        _truncate_file(p, 3)
+    with pytest.raises(store.CheckpointCorruptionError):
+        store.load_checkpoint_recovering(path)
+    with pytest.raises(FileNotFoundError):
+        store.load_checkpoint_recovering(str(tmp_path / "never.json"))
+
+
+def test_legacy_checkpoint_without_envelope_still_loads(tmp_path):
+    path = str(tmp_path / "legacy.json")
+    with open(path, "w") as f:
+        json.dump(_state(4), f)
+    state, report = store.load_checkpoint_recovering(path)
+    assert state["next_tile"] == 4 and report["quarantined"] == []
+
+
+# --- corruption-recovery property: resume == fresh, never a traceback ---------
+
+
+def _corrupt_resume_equals_fresh(tmp_path, fresh_result, offset, mode):
+    """Interrupt mid-campaign, damage the checkpoint at ``offset``, resume.
+    Whatever the byte hit — integrity envelope, payload, or whitespace whose
+    flip still parses — the resumed run must finish with frontiers bitwise
+    equal to the fresh run, with no traceback ever."""
+    ckpt = str(tmp_path / f"ckpt_{mode}_{offset}.json")
+    interrupted = campaign()
+    interrupted.run(checkpoint_path=ckpt, max_tiles=3)
+    if mode == "flip":
+        assert _corrupt_file(ckpt, offset)
+    else:
+        assert _truncate_file(ckpt, offset)
+    resumed = Campaign.from_checkpoint(ckpt)  # quarantine + fallback inside
+    final = resumed.run(checkpoint_path=ckpt)
+    assert final.complete
+    assert_identical_frontiers(final.frontiers, fresh_result.frontiers)
+
+
+@pytest.mark.parametrize("mode", ["flip", "truncate"])
+@pytest.mark.parametrize("offset", [0, 1, 17, 101, 997, 10007])
+def test_corrupt_any_byte_resume_equals_fresh(tmp_path, fresh_result,
+                                              offset, mode):
+    _corrupt_resume_equals_fresh(tmp_path, fresh_result, offset, mode)
+
+
+@settings(max_examples=15, deadline=None)
+@given(offset=st.integers(min_value=0, max_value=1 << 20),
+       mode=st.sampled_from(["flip", "truncate"]))
+def test_corrupt_random_byte_resume_equals_fresh(tmp_path_factory,
+                                                 fresh_result, offset, mode):
+    _corrupt_resume_equals_fresh(tmp_path_factory.mktemp("fuzz"),
+                                 fresh_result, offset, mode)
+
+
+# --- LeaseBoard: park / unpark / settled --------------------------------------
+
+
+def test_lease_board_park_unpark_settled():
+    board = LeaseBoard(3)
+    assert board.next_tile("a") == 0
+    assert board.park(0) is True  # parking drops the lease
+    assert board.leases == {}
+    assert board.park(0) is False  # already parked
+    assert board.next_tile("a") == 1  # parked tile never re-issues
+    assert board.complete(1) and board.complete(2)
+    assert board.all_settled and not board.all_done
+    assert board.parked_tiles == [0] and board.n_pending == 0
+    assert board.unpark(0) is True
+    assert board.next_tile("b") == 0  # retry path re-issues it
+    assert board.complete(0)
+    assert board.all_done
+    assert board.unpark(0) is False  # nothing parked anymore
+
+
+def test_lease_board_late_delivery_of_parked_tile_completes_it():
+    board = LeaseBoard(2)
+    board.next_tile("a")
+    board.park(0)
+    assert board.complete(0) is True  # delivered evidence beats quarantine
+    assert board.parked_tiles == []
+    with pytest.raises(IndexError):
+        board.park(9)
+
+
+# --- poison-tile quarantine through the fabric --------------------------------
+
+
+def test_local_fabric_poison_tile_quarantine_and_retry(fresh_result):
+    camp = campaign()
+    fabric = LocalFabric(camp, n_workers=3,
+                         fault=FaultInjection(poison_tile=2),
+                         poison_threshold=2,
+                         retry=RetryPolicy(base_s=1.0, max_s=4.0))
+    result = fabric.run()
+    stats = fabric.coord.stats
+    assert stats["poison_tiles"] == [2]
+    assert stats["poison_retried"] == [2]
+    assert len(stats["worker_crashes"]) == 2  # exactly threshold deaths
+    assert_identical_frontiers(result.frontiers, fresh_result.frontiers)
+    snap = camp.telemetry.metrics.snapshot()
+    assert metric_value(snap, "fabric_poison_tiles_total") == 1
+    assert metric_value(snap, "fabric_worker_crashed") == 2
+
+
+def test_poison_tile_requires_fake_clock():
+    with pytest.raises(ValueError):
+        LocalFabric(campaign(), fault=FaultInjection(poison_tile=0),
+                    clock=__import__("time").monotonic)
+
+
+def test_worker_lost_counters_distinguish_crash_from_clean_exit():
+    camp = campaign()
+    coord = FabricCoordinator(camp, clock=FakeClock())
+    coord.register_worker("a")
+    coord.register_worker("b")
+    coord.lease("a")
+    coord.lease("b")
+    coord.worker_lost("a", crashed=True)
+    coord.worker_lost("b", crashed=False)
+    assert coord.stats["worker_crashes"] == ["a"]
+    assert coord.stats["worker_clean_exits"] == ["b"]
+    snap = camp.telemetry.metrics.snapshot()
+    assert metric_value(snap, "fabric_worker_crashed") == 1
+    assert metric_value(snap, "fabric_worker_done") == 1
+
+
+# --- coordinator crash-recovery from checkpoint + journal ---------------------
+
+
+def test_coordinator_from_checkpoint_recovers_mid_campaign(tmp_path,
+                                                           fresh_result):
+    ckpt = str(tmp_path / "fab.json")
+    camp = campaign()
+    clock = FakeClock()
+    coord = FabricCoordinator(camp, lease_timeout_s=10.0, clock=clock)
+    fabric = LocalFabric(coord, n_workers=2)
+    fabric.run(max_completions=3, checkpoint_path=ckpt)
+    _corrupt_file(ckpt, 23)  # the restart must survive a damaged canonical
+
+    coord2 = FabricCoordinator.from_checkpoint(ckpt, lease_timeout_s=10.0,
+                                               clock=clock)
+    rec = coord2.stats["recovery"]
+    assert rec["tiles_done_at_restart"] == 3
+    assert rec["quarantined"] == [ckpt + ".corrupt"]
+    # 3 per-completion checkpoints + the final interrupt checkpoint = gen 4
+    assert rec["journal_generation"] == rec["fallback_generation"] == 4
+    assert rec["journal_torn_lines"] == 0
+    snap = coord2.campaign.telemetry.metrics.snapshot()
+    assert metric_value(snap, "fabric_coordinator_recoveries_total") == 1
+    assert metric_value(snap, "fabric_checkpoints_quarantined_total") == 1
+
+    final = LocalFabric(coord2, n_workers=2).run(checkpoint_path=ckpt)
+    assert_identical_frontiers(final.frontiers, fresh_result.frontiers)
+
+
+def test_coordinator_recovery_restores_parked_tiles(tmp_path):
+    ckpt = str(tmp_path / "parked.json")
+    camp = campaign()
+    coord = FabricCoordinator(camp, clock=FakeClock(), poison_threshold=1)
+    coord.register_worker("w")
+    tile = coord.lease("w")
+    coord.worker_lost("w", crashed=True)  # threshold 1: parked immediately
+    assert coord.board.parked_tiles == [tile]
+    coord.checkpoint(ckpt)
+    coord2 = FabricCoordinator.from_checkpoint(ckpt, clock=FakeClock())
+    assert coord2.board.parked_tiles == [tile]
+    assert coord2.stats["poison_tiles"] == [tile]
+
+
+# --- circuit breaker (unit, fake clock) ---------------------------------------
+
+
+def test_circuit_breaker_trips_cools_probes_and_closes():
+    clock = FakeClock()
+    seen = []
+    br = CircuitBreaker(fail_threshold=2, cooldown_s=10.0, clock=clock,
+                        on_transition=lambda a, b: seen.append((a, b)))
+    assert br.allow() and br.state == "closed"
+    br.record_failure()
+    assert br.state == "closed"  # below threshold
+    br.record_failure()
+    assert br.state == "open" and not br.allow()
+    clock.advance(9.9)
+    assert not br.allow()  # still cooling
+    clock.advance(0.2)
+    assert br.allow() and br.state == "half_open"  # one probe admitted
+    br.record_failure()  # probe failed: re-open for a full cooldown
+    assert br.state == "open" and not br.allow()
+    clock.advance(10.1)
+    assert br.allow() and br.state == "half_open"
+    br.record_success()
+    assert br.state == "closed" and br.allow()
+    assert seen == [("closed", "open"), ("open", "half_open"),
+                    ("half_open", "open"), ("open", "half_open"),
+                    ("half_open", "closed")]
+
+
+def test_circuit_breaker_success_resets_failure_streak():
+    br = CircuitBreaker(fail_threshold=3, clock=FakeClock())
+    br.record_failure()
+    br.record_failure()
+    br.record_success()  # streak broken
+    br.record_failure()
+    br.record_failure()
+    assert br.state == "closed"
+    br.record_failure()
+    assert br.state == "open"
+
+
+def test_circuit_breaker_validation():
+    with pytest.raises(ValueError):
+        CircuitBreaker(fail_threshold=0)
+    with pytest.raises(ValueError):
+        CircuitBreaker(cooldown_s=-1.0)
+
+
+# --- chaos harness ------------------------------------------------------------
+
+
+def test_chaos_policy_roundtrip_and_validation():
+    pol = ChaosPolicy(events=(ChaosEvent(2, "kill_worker", 1),
+                              ChaosEvent(3, "corrupt_checkpoint", 17)),
+                      poison_tile=4, seed=9)
+    assert ChaosPolicy.from_dict(pol.to_dict()) == pol
+    with pytest.raises(ValueError):
+        ChaosEvent(1, "set_on_fire")
+    with pytest.raises(ValueError):
+        ChaosEvent(-1, "kill_worker")
+
+
+def test_chaos_policy_random_is_deterministic():
+    a = ChaosPolicy.random(seed=3, n_events=4, horizon=7)
+    assert a == ChaosPolicy.random(seed=3, n_events=4, horizon=7)
+    assert a != ChaosPolicy.random(seed=4, n_events=4, horizon=7)
+    assert len(a.events) == 4
+
+
+def test_chaos_run_kill_restart_corrupt_identical_to_fresh(tmp_path,
+                                                           fresh_result):
+    """The harness's own headline scenario: a worker kill, an on-disk
+    corruption, and a coordinator restart in one run — frontiers must come
+    out bitwise-identical, and the report must show the recovery."""
+    policy = ChaosPolicy(events=(ChaosEvent(1, "kill_worker"),
+                                 ChaosEvent(3, "corrupt_checkpoint", 31),
+                                 ChaosEvent(3, "restart_coordinator")))
+    runner = ChaosRunner(WLS, CampaignConfig(space=small_spec(),
+                                             constraint=CONS),
+                         policy, n_workers=3)
+    result, report = runner.run(str(tmp_path / "chaos.json"))
+    assert_identical_frontiers(result.frontiers, fresh_result.frontiers)
+    assert report["kills"] == 1 and report["restarts"] == 1
+    assert report["corruptions"] == 1
+    assert len(report["quarantined_files"]) == 1
+    assert report["respawns"] == 1
+    assert report["recoveries"][0]["tiles_done_at_restart"] >= 1
+
+
+def test_chaos_run_is_deterministic(tmp_path, fresh_result):
+    policy = ChaosPolicy.random(seed=11, n_events=5, horizon=7)
+    reports = []
+    for i in range(2):
+        runner = ChaosRunner(WLS, CampaignConfig(space=small_spec(),
+                                                 constraint=CONS),
+                             policy, n_workers=3)
+        result, report = runner.run(str(tmp_path / f"det{i}.json"))
+        assert_identical_frontiers(result.frontiers, fresh_result.frontiers)
+        reports.append(report)
+    assert reports[0] == reports[1]  # same policy, same faults, same counts
+
+
+# --- multiprocess exit-code distinction (real processes) ----------------------
+
+
+def test_multiprocess_crash_vs_clean_exit_counters(tmp_path, fresh_result):
+    """The ONLY worker is killed by ``os._exit`` mid-tile, so the run can
+    complete only through a RetryPolicy-paced respawn; the kill is counted
+    as a crash, the respawned worker's shutdown as a clean exit — and the
+    frontier still matches the fault-free run."""
+    camp = campaign()
+    result, stats = run_distributed(
+        camp, fault=FaultInjection(kill_worker=0, kill_after_tiles=1),
+        retry=RetryPolicy(base_s=0.05, max_s=0.2),
+        max_respawns=2, n_workers=1, lease_timeout_s=60.0,
+        checkpoint_path=str(tmp_path / "mp.json"))
+    assert_identical_frontiers(result.frontiers, fresh_result.frontiers)
+    assert stats["worker_crashes"] == [0]
+    assert len(stats["worker_clean_exits"]) >= 1  # the respawned worker
+    snap = camp.telemetry.metrics.snapshot()
+    assert metric_value(snap, "fabric_worker_crashed") == 1
+    assert metric_value(snap, "fabric_worker_done") >= 1
+    assert metric_value(snap, "fabric_worker_respawns_total") >= 1
